@@ -1,0 +1,143 @@
+"""Shared benchmark workbench: datasets, graphs, trained estimators — cached
+to disk so `python -m benchmarks.run` is re-entrant and the expensive
+ground-truth generation (the paper's offline one-time step, §4.3) happens
+once per (dataset, filter-type)."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import numpy as np
+
+from repro.core import (
+    BIG_BUDGET,
+    CostEstimator,
+    SearchConfig,
+    SearchEngine,
+    generate_training_data,
+)
+from repro.core.gbdt import GBDTModel
+from repro.data import make_preset
+from repro.data.synthetic import make_label_workload, make_range_workload
+from repro.filters.predicates import PRED_CONTAIN, PRED_EQUAL, PRED_RANGE
+from repro.index import build_graph_index, filtered_knn_exact
+from repro.index.graph import GraphIndex
+
+CACHE = os.environ.get("REPRO_BENCH_CACHE",
+                       os.path.join(os.path.dirname(__file__), "..",
+                                    "experiments", "bench_cache"))
+
+PRED_OF = {"contain": PRED_CONTAIN, "equal": PRED_EQUAL, "range": PRED_RANGE}
+
+# benchmark-scale knobs (container-scaled; see EXPERIMENTS.md §Scaling)
+QUEUE = 1024
+K = 10
+PROBE = 128
+TRAIN_QUERIES = 1536
+EVAL_QUERIES = 128
+
+
+def search_cfg(kind: str) -> SearchConfig:
+    return SearchConfig(k=K, queue_size=QUEUE, pred_kind=PRED_OF[kind],
+                        max_steps=100000)
+
+
+def make_workload(ds, kind: str, batch: int, seed: int, hard_fraction=0.5):
+    if kind == "range":
+        return make_range_workload(ds, batch=batch, hard_fraction=hard_fraction,
+                                   seed=seed)
+    return make_label_workload(ds, batch=batch, kind=kind,
+                               hard_fraction=hard_fraction, seed=seed)
+
+
+@dataclasses.dataclass
+class Bench:
+    preset: str
+    kind: str
+    ds: object
+    graph: GraphIndex
+    engine: SearchEngine
+    estimator: CostEstimator          # mean model (paper-faithful)
+    estimator_q: CostEstimator        # τ=0.7 quantile model (beyond-paper)
+    estimator_nf: CostEstimator       # trained w/o filter features (LAET abl.)
+    train_data: object
+
+
+def _graph_path(preset):
+    return os.path.join(CACHE, f"{preset}_graph.npz")
+
+
+def get_engine(preset: str, verbose=True):
+    os.makedirs(CACHE, exist_ok=True)
+    ds = make_preset(preset)
+    gp = _graph_path(preset)
+    if os.path.exists(gp):
+        graph = GraphIndex.load(gp)
+    else:
+        t0 = time.time()
+        graph = build_graph_index(ds.vectors, degree=32, seed=0)
+        graph.save(gp)
+        if verbose:
+            print(f"# built graph for {preset} in {time.time()-t0:.0f}s")
+    return ds, graph, SearchEngine.build(ds, graph)
+
+
+def get_bench(preset: str, kind: str, verbose=True) -> Bench:
+    ds, graph, engine = get_engine(preset, verbose)
+    cfg = search_cfg(kind)
+    td_path = os.path.join(CACHE, f"{preset}_{kind}_train.npz")
+    if os.path.exists(td_path):
+        z = np.load(td_path)
+        feats, w_q = z["features"], z["w_q"]
+    else:
+        t0 = time.time()
+        wl = make_workload(ds, kind, TRAIN_QUERIES, seed=10)
+        td = generate_training_data(engine, ds, wl, cfg, probe_budget=PROBE,
+                                    chunk=256)
+        feats, w_q = td.features, td.w_q
+        np.savez_compressed(td_path, features=feats, w_q=w_q,
+                            converged=td.converged)
+        if verbose:
+            print(f"# W_q ground truth for {preset}/{kind}: "
+                  f"{time.time()-t0:.0f}s, conv={td.converged.mean():.2f}")
+
+    ests = {}
+    for variant, kwargs in (
+        ("mean", dict()),
+        ("q", dict(objective="quantile", tau=0.7)),
+        ("nf", dict(ablate=True)),
+    ):
+        mp = os.path.join(CACHE, f"{preset}_{kind}_{variant}.npz")
+        ablate = kwargs.pop("ablate", False)
+        x = feats.copy()
+        if ablate:
+            from repro.core.features import FILTER_FEATURE_IDX, N_FEATURES
+
+            for b in range(x.shape[1] // N_FEATURES):
+                for ix in FILTER_FEATURE_IDX:
+                    x[:, b * N_FEATURES + ix] = 0.0
+        if os.path.exists(mp):
+            ests[variant] = CostEstimator(model=GBDTModel.load(mp))
+        else:
+            est = CostEstimator.fit(x, w_q, n_trees=400, depth=6,
+                                    learning_rate=0.05, min_child=5,
+                                    subsample=0.8, **kwargs)
+            est.model.save(mp)
+            ests[variant] = est
+
+    class _TD:
+        features = feats
+        w_q_ = w_q
+
+    return Bench(preset=preset, kind=kind, ds=ds, graph=graph, engine=engine,
+                 estimator=ests["mean"], estimator_q=ests["q"],
+                 estimator_nf=ests["nf"], train_data=_TD)
+
+
+def eval_workload(bench: Bench, seed=99, batch=EVAL_QUERIES):
+    wl = make_workload(bench.ds, bench.kind, batch, seed=seed)
+    gt_idx, gt_dist = filtered_knn_exact(
+        wl.queries, bench.ds.vectors, wl.spec, bench.ds.labels_packed,
+        bench.ds.values, K)
+    return wl, gt_idx, gt_dist

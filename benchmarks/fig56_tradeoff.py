@@ -1,0 +1,74 @@
+"""Figs. 5/6 — recall vs query latency (fig5) and vs NDC (fig6):
+E2E vs Naive-HNSW-style vs the no-filter-features ablation ("w/o filter")
+plus the beyond-paper quantile-budget variant and the oracle lower bound."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import Bench, eval_workload, search_cfg, PROBE
+from repro.core import baselines, e2e_search
+from repro.index.bruteforce import recall_at_k
+
+ALPHAS = (0.75, 1.0, 1.5, 2.5)
+EFS = (64, 128, 256, 512, 1024)
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    out = fn()
+    return out, time.perf_counter() - t0
+
+
+def run(bench: Bench):
+    cfg = search_cfg(bench.kind)
+    wl, gt_idx, _ = eval_workload(bench)
+    b = wl.batch
+    curves = []
+
+    def add(variant, param, state, dt):
+        rec = recall_at_k(np.asarray(state.res_idx), gt_idx).mean()
+        curves.append({
+            "name": f"fig56_{bench.preset}_{bench.kind}_{variant}_{param}",
+            "variant": variant, "param": param,
+            "recall": float(rec),
+            "ndc": float(np.asarray(state.cnt).mean()),
+            "latency_ms_per_query": dt / b * 1e3,
+        })
+
+    for a in ALPHAS:
+        r, dt = _timed(lambda a=a: e2e_search(
+            bench.engine, bench.estimator, cfg, wl.queries, wl.spec,
+            probe_budget=PROBE, alpha=a))
+        add("e2e", a, r.state, dt)
+        r, dt = _timed(lambda a=a: e2e_search(
+            bench.engine, bench.estimator_q, cfg, wl.queries, wl.spec,
+            probe_budget=PROBE, alpha=a))
+        add("e2e_quantile", a, r.state, dt)
+        r, dt = _timed(lambda a=a: e2e_search(
+            bench.engine, bench.estimator_nf, cfg, wl.queries, wl.spec,
+            probe_budget=PROBE, alpha=a, ablate_filter=True))
+        add("laet_nofilter", a, r.state, dt)
+    for ef in EFS:
+        st, dt = _timed(lambda ef=ef: baselines.naive_search(
+            bench.engine, cfg, wl.queries, wl.spec, ef))
+        add("naive", ef, st, dt)
+    return curves
+
+
+def speedup_at_matched_recall(curves, a="e2e", b="naive"):
+    """NDC speedup of a's curve over b's at a's recall points (interp)."""
+    ca = sorted([(c["recall"], c["ndc"]) for c in curves if c["variant"] == a])
+    cb = sorted([(c["recall"], c["ndc"]) for c in curves if c["variant"] == b])
+    if not ca or not cb:
+        return {}
+    out = {}
+    rb = [r for r, _ in cb]
+    nb = [n for _, n in cb]
+    for r, n in ca:
+        if r < rb[0] or r > rb[-1]:
+            continue
+        nb_interp = float(np.interp(r, rb, nb))
+        out[round(r, 3)] = nb_interp / n
+    return out

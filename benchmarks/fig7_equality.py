@@ -1,0 +1,35 @@
+"""Fig. 7 — strict equality filters (extreme sparsity): E2E detects low
+ρ_pilot and right-sizes budgets while the naive baseline pays exhaustive
+traversal for every query."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import eval_workload, get_bench, search_cfg, PROBE
+from repro.core import baselines, e2e_search
+from repro.index.bruteforce import recall_at_k
+
+
+def run(preset="tripclick-s"):
+    bench = get_bench(preset, "equal")
+    cfg = search_cfg("equal")
+    wl, gt_idx, _ = eval_workload(bench)
+    rows = []
+    r = e2e_search(bench.engine, bench.estimator_q, cfg, wl.queries, wl.spec,
+                   probe_budget=PROBE, alpha=1.5)
+    rows.append({
+        "name": f"fig7_{preset}_equal_e2e",
+        "recall": float(recall_at_k(np.asarray(r.state.res_idx), gt_idx).mean()),
+        "ndc": float(np.asarray(r.state.cnt).mean()),
+        "ndc_p99": float(np.percentile(np.asarray(r.state.cnt), 99)),
+        "mean_rho_pilot": float(np.asarray(r.probe_features)[:, 3].mean()),
+    })
+    for ef in (256, 1024):
+        st = baselines.naive_search(bench.engine, cfg, wl.queries, wl.spec, ef)
+        rows.append({
+            "name": f"fig7_{preset}_equal_naive{ef}",
+            "recall": float(recall_at_k(np.asarray(st.res_idx), gt_idx).mean()),
+            "ndc": float(np.asarray(st.cnt).mean()),
+            "ndc_p99": float(np.percentile(np.asarray(st.cnt), 99)),
+        })
+    return rows

@@ -1,0 +1,25 @@
+"""Fig. 8 — top-8 GBDT gain importances; the paper's claim: the filter-aware
+features (ρ_pilot, ρ_queue, + our progression features) rank top-8."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import Bench
+from repro.core.features import FILTER_FEATURE_IDX, N_FEATURES, feature_names
+
+
+def run(bench: Bench):
+    imp = bench.estimator.model.importances
+    names = feature_names(n_probes=imp.shape[0] // N_FEATURES)
+    order = np.argsort(imp)[::-1]
+    top8 = [(names[i], float(imp[i] / max(imp.sum(), 1e-9))) for i in order[:8]]
+    filter_named = set()
+    for b in range(imp.shape[0] // N_FEATURES):
+        for ix in FILTER_FEATURE_IDX:
+            filter_named.add(names[b * N_FEATURES + ix])
+    n_filter_in_top8 = sum(1 for n, _ in top8 if n in filter_named)
+    return [{
+        "name": f"fig8_{bench.preset}_{bench.kind}",
+        "top8": top8,
+        "filter_features_in_top8": n_filter_in_top8,
+    }]

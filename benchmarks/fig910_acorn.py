@@ -1,0 +1,57 @@
+"""Figs. 9/10 — generalization to PreFiltering indices (ACORN-γ, §A.3).
+
+PreFiltering traversal keeps only predicate-valid nodes in the queue
+(ρ_queue ≡ 1) and expands 1-hop ∪ strided 2-hop neighborhoods; the cost
+signal moves to ρ_visited = valid/inspected. E2E-ACORN trains on pre-mode
+trajectories and budget-terminates the same traversal.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+
+import numpy as np
+
+from benchmarks.common import (CACHE, eval_workload, get_bench, make_workload,
+                               search_cfg, PROBE)
+from repro.core import CostEstimator, baselines, e2e_search, generate_training_data
+from repro.core.gbdt import GBDTModel
+from repro.index.bruteforce import recall_at_k
+
+
+def run(preset="tripclick-s", kind="contain"):
+    bench = get_bench(preset, kind)
+    cfg = dataclasses.replace(search_cfg(kind), mode="pre", queue_size=512,
+                              two_hop_stride=8)
+
+    mp = os.path.join(CACHE, f"{preset}_{kind}_pre.npz")
+    if os.path.exists(mp):
+        est = CostEstimator(model=GBDTModel.load(mp))
+    else:
+        wl_tr = make_workload(bench.ds, kind, 512, seed=12)
+        td = generate_training_data(bench.engine, bench.ds, wl_tr, cfg,
+                                    probe_budget=PROBE, chunk=256)
+        est = CostEstimator.fit(td.features, td.w_q, n_trees=300, depth=6,
+                                learning_rate=0.05, min_child=5, subsample=0.8)
+        est.model.save(mp)
+
+    wl, gt_idx, _ = eval_workload(bench)
+    rows = []
+    for a in (1.0, 2.0, 4.0):
+        r = e2e_search(bench.engine, est, cfg, wl.queries, wl.spec,
+                       probe_budget=PROBE, alpha=a)
+        rows.append({
+            "name": f"fig910_{preset}_{kind}_e2e-acorn_a{a}",
+            "recall": float(recall_at_k(np.asarray(r.state.res_idx), gt_idx).mean()),
+            "ndc": float(np.asarray(r.state.cnt).mean()),
+            "inspected": float(np.asarray(r.state.n_inspected).mean()),
+        })
+    for ef in (64, 128, 256, 512):
+        st = baselines.naive_search(bench.engine, cfg, wl.queries, wl.spec, ef)
+        rows.append({
+            "name": f"fig910_{preset}_{kind}_acorn_ef{ef}",
+            "recall": float(recall_at_k(np.asarray(st.res_idx), gt_idx).mean()),
+            "ndc": float(np.asarray(st.cnt).mean()),
+            "inspected": float(np.asarray(st.n_inspected).mean()),
+        })
+    return rows

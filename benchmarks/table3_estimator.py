@@ -1,0 +1,22 @@
+"""Table 3 — cost-estimator accuracy on held-out queries:
+Log-RMSE, R² (log space), Spearman ρ per (dataset, filter)."""
+from __future__ import annotations
+
+from benchmarks.common import Bench, eval_workload, search_cfg, PROBE
+from repro.core import generate_training_data
+from benchmarks.common import make_workload
+
+
+def run(bench: Bench, batch=160):
+    cfg = search_cfg(bench.kind)
+    wl = make_workload(bench.ds, bench.kind, batch, seed=97)
+    td = generate_training_data(bench.engine, bench.ds, wl, cfg,
+                                probe_budget=PROBE, chunk=256)
+    m = bench.estimator.eval_metrics(td.features, td.w_q)
+    return [{
+        "name": f"table3_{bench.preset}_{bench.kind}",
+        "log_rmse": round(m["log_rmse"], 3),
+        "r2": round(m["r2"], 3),
+        "spearman": round(m["spearman"], 3),
+        "n_eval": int(td.w_q.shape[0]),
+    }]

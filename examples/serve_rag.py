@@ -1,0 +1,93 @@
+"""End-to-end serving driver: a small LM answers batched requests with
+filtered-RAG retrieval powered by the E2E engine.
+
+Per request: (1) embed the prompt (stub projection — the corpus *is* the
+embedding space), (2) filtered AKNN search with a metadata constraint and a
+per-query adaptive budget from the cost estimator, (3) prepend retrieved doc
+ids as context tokens, (4) batched greedy decode with a KV cache.
+
+This is the paper's deployment story: retrieval latency is bounded per
+query by predicted budgets, and the batch tail is clamped
+(fault_tolerance.clamp_budgets) so one hard filter can't stall the batch.
+
+    PYTHONPATH=src python examples/serve_rag.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core import (CostEstimator, SearchConfig, SearchEngine,
+                        e2e_search, generate_training_data)
+from repro.core.e2e import probe_and_features
+from repro.data import make_dataset, make_label_workload
+from repro.distributed.fault_tolerance import clamp_budgets
+from repro.filters.predicates import PRED_CONTAIN
+from repro.index import build_graph_index
+from repro.models import build_model, split_tree
+from repro.models.transformer import _pad_cache_seq
+
+
+def main():
+    batch, gen_len = 8, 12
+
+    print("== retrieval substrate (E2E)")
+    ds = make_dataset(n=6000, dim=48, n_clusters=12, alphabet_size=32, seed=0)
+    graph = build_graph_index(ds.vectors, degree=24, seed=0)
+    engine = SearchEngine.build(ds, graph)
+    cfg = SearchConfig(k=4, queue_size=256, pred_kind=PRED_CONTAIN)
+    wl_tr = make_label_workload(ds, batch=256, kind="contain", seed=7)
+    td = generate_training_data(engine, ds, wl_tr, cfg, probe_budget=64, chunk=128)
+    est = CostEstimator.fit(td.features, td.w_q, n_trees=150, depth=5)
+
+    print("== LM (olmo-family tiny config)")
+    mcfg = get_arch("olmo-1b").tiny()
+    model = build_model(mcfg)
+    prm, _ = split_tree(model.init_params(jax.random.key(0)))
+
+    print("== batched requests: prompt + label filter")
+    wl = make_label_workload(ds, batch=batch, kind="contain", seed=42)
+
+    t0 = time.time()
+    r = e2e_search(engine, est, cfg, wl.queries, wl.spec, probe_budget=64,
+                   alpha=1.5)
+    budgets, requeue = clamp_budgets(r.predicted_budget, quantile=0.9)
+    doc_ids = np.asarray(r.state.res_idx)
+    print(f"   retrieval: {1e3*(time.time()-t0)/batch:.1f} ms/query, "
+          f"mean NDC={np.asarray(r.state.cnt).mean():.0f}, "
+          f"{int(requeue.sum())} hard queries flagged for re-queue")
+
+    # context = [doc tokens] + prompt tokens (stub tokenization of doc ids)
+    prompt_len = 8
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(0, mcfg.vocab_size, (batch, prompt_len))
+    ctx = np.concatenate([np.abs(doc_ids) % mcfg.vocab_size, prompts], axis=1)
+    tokens = jnp.asarray(ctx, jnp.int32)
+
+    print("== prefill + batched greedy decode")
+    logits, part_cache = jax.jit(model.prefill)(prm, {"tokens": tokens})
+    cap = tokens.shape[1] + gen_len
+    cache, _ = split_tree(model.init_cache(batch, cap))
+    cache = _pad_cache_seq(cache, part_cache)
+    step = jax.jit(model.decode_step)
+    pos = jnp.full((batch,), tokens.shape[1], jnp.int32)
+    cur = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+    outs = [np.asarray(cur)]
+    t0 = time.time()
+    for t in range(gen_len - 1):
+        logits, cache = step(prm, cache, cur, pos + t, None)
+        cur = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+        outs.append(np.asarray(cur))
+    gen = np.concatenate(outs, axis=1)
+    dt = time.time() - t0
+    print(f"   decoded {gen_len} tokens x {batch} requests "
+          f"({1e3*dt/(gen_len*batch):.2f} ms/token/request)")
+    print("   sample generations (token ids):")
+    for b in range(min(3, batch)):
+        print(f"   req{b}: docs={doc_ids[b].tolist()} -> {gen[b].tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""Training driver: a tiny LM for a few hundred steps with the full
+production path — AdamW (optionally int8 moments), gradient accumulation,
+checkpoint/restart, and straggler monitoring.
+
+    PYTHONPATH=src python examples/train_tiny_lm.py [--steps 200] [--arch olmo-1b]
+"""
+import argparse
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.distributed.fault_tolerance import StepMonitor
+from repro.models import build_model, split_tree
+from repro.train.checkpoint import CheckpointManager
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import TrainConfig, make_init_state, make_train_step
+
+
+def synthetic_batches(vocab, batch, seq, seed=0):
+    """Markov-chain tokens — learnable structure so loss visibly drops."""
+    rng = np.random.default_rng(seed)
+    trans = rng.dirichlet(np.full(vocab, 0.05), size=vocab)
+    cum = np.cumsum(trans, axis=1)
+    while True:
+        toks = np.empty((batch, seq), np.int32)
+        toks[:, 0] = rng.integers(0, vocab, batch)
+        u = rng.random((batch, seq))
+        for t in range(1, seq):
+            toks[:, t] = np.array(
+                [np.searchsorted(cum[toks[b, t - 1]], u[b, t]) for b in range(batch)])
+        yield {"tokens": jnp.asarray(np.clip(toks, 0, vocab - 1))}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_tiny_lm")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch).tiny()
+    model = build_model(cfg)
+    tc = TrainConfig(opt=AdamWConfig(lr=1e-3, weight_decay=0.01), grad_accum=2)
+    init = make_init_state(model, tc)
+    state_p = init(jax.random.key(0))
+    state, _ = split_tree(state_p)
+    step_fn = jax.jit(make_train_step(model, tc), donate_argnums=(0,))
+
+    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    start = 0
+    if args.resume and mgr.latest_step() is not None:
+        abstract = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+        state, manifest = mgr.restore_latest(abstract)
+        start = manifest["step"]
+        print(f"resumed from step {start}")
+
+    data = synthetic_batches(cfg.vocab_size, batch=8, seq=64)
+    mon = StepMonitor()
+    t0 = time.time()
+    for i in range(start, args.steps):
+        mon.start()
+        state, metrics = step_fn(state, next(data))
+        ev = mon.stop()
+        if ev:
+            print(f"  [straggler] step {ev.step}: {ev.duration:.2f}s "
+                  f"vs median {ev.median:.2f}s")
+        if (i + 1) % 25 == 0:
+            print(f"step {i+1:4d} loss={float(metrics['loss']):.3f} "
+                  f"ce={float(metrics['ce']):.3f} "
+                  f"({(time.time()-t0)/(i+1-start):.2f}s/step)")
+        if (i + 1) % 100 == 0:
+            mgr.save(i + 1, state)
+            print(f"  checkpointed step {i+1} -> {args.ckpt_dir}")
+    final_ce = float(metrics["ce"])
+    print(f"done. final ce={final_ce:.3f} (random ≈ {np.log(cfg.vocab_size):.3f})")
+
+
+if __name__ == "__main__":
+    main()

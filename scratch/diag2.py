@@ -1,0 +1,72 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax, jax.numpy as jnp, dataclasses, re, sys
+from collections import Counter
+from repro.configs import get_arch, SHAPES
+from repro.models import build_model, split_tree
+from repro.models.transformer import BlockApplier, Ctx
+from repro.launch.mesh import make_production_mesh
+from repro.distributed.sharding import tree_shardings
+from jax.sharding import NamedSharding, PartitionSpec
+
+def coll_profile(comp):
+    txt = comp.as_text()
+    DT = {'f32':4,'bf16':2,'s32':4,'u32':4,'s8':1,'u8':1,'pred':1}
+    tot = Counter()
+    for line in txt.splitlines():
+        m = re.search(r'=\s+(.+?)\s+(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)(-start)?\(', line)
+        if not m: continue
+        b = 0
+        for d, s in re.findall(r'\b(f32|bf16|s32|u32|s8|u8|pred)\[([0-9,]*)\]', m.group(1)):
+            n = 1
+            for dim in (s.split(',') if s else []): n *= int(dim)
+            b += n * DT[d]
+        opname = re.search(r'op_name="([^"]*)"', line)
+        tot[(m.group(2), opname.group(1)[-70:] if opname else '?')] += b
+    return tot
+
+which = sys.argv[1]
+mesh = make_production_mesh()
+if which == 'ds_row':
+    cfg = dataclasses.replace(get_arch('deepseek-v3-671b'), param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16)
+    model = build_model(cfg)
+    prm_abs = jax.eval_shape(model.init_params, jax.random.key(0))
+    sds, axes = split_tree(prm_abs)
+    bp_sds = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), sds['seg0']['pos0'])
+    bp_axes = jax.tree.map(lambda t: tuple(t[1:]), axes['seg0']['pos0'],
+                           is_leaf=lambda x: isinstance(x, tuple) and (len(x)==0 or isinstance(x[0],(str,type(None)))))
+    bp_sh = tree_shardings(mesh, bp_sds, bp_axes)
+    B, S, D = 32, 4096, 7168
+    bt = model.segments[0].period[0]
+    def fwd(bp, x):
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        y, _, _ = BlockApplier(cfg)(bt, bp, x, Ctx(mode="train", positions=positions))
+        return jnp.sum(y.astype(jnp.float32))
+    tgt = jax.grad(fwd, argnums=(0,1))
+    x_sds = jax.ShapeDtypeStruct((B, S, D), jnp.bfloat16)
+    x_sh = NamedSharding(mesh, PartitionSpec('data', None, None))
+    with mesh:
+        comp = jax.jit(tgt, in_shardings=(bp_sh, x_sh)).lower(bp_sds, x_sds).compile()
+else:  # gemma decode step full
+    cfg = dataclasses.replace(get_arch('gemma3-12b'), param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16)
+    model = build_model(cfg)
+    from repro.launch.specs import decode_inputs_specs
+    shape = SHAPES['decode_32k']
+    prm_abs = jax.eval_shape(model.init_params, jax.random.key(0))
+    sds, axes = split_tree(prm_abs)
+    prm_sh = tree_shardings(mesh, sds, axes)
+    cache_abs = jax.eval_shape(lambda: model.init_cache(shape.global_batch, shape.seq_len))
+    csds, caxes = split_tree(cache_abs)
+    csh = tree_shardings(mesh, csds, caxes)
+    in_sds, in_sh = decode_inputs_specs(cfg, shape, mesh)
+    def serve(prm, cache, tokens, pos):
+        return model.decode_step(prm, cache, tokens, pos, None)
+    with mesh:
+        comp = jax.jit(serve, in_shardings=(prm_sh, csh, in_sh['tokens'], in_sh['pos']),
+                       out_shardings=(None, csh), donate_argnums=(1,)).lower(
+                           sds, csds, in_sds['tokens'], in_sds['pos']).compile()
+tot = coll_profile(comp)
+print(f"== {which}: per-device collective result-bytes")
+for (kind, op), b in tot.most_common(10):
+    print(f"{b/1e9:8.2f} GB  {kind:<14} {op}")
+print("TOTAL %.1f GB" % (sum(tot.values())/1e9))

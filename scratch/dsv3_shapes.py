@@ -1,0 +1,43 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import jax, jax.numpy as jnp, dataclasses, re
+from collections import Counter
+from repro.configs import get_arch, SHAPES
+from repro.models import build_model, split_tree
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import train_batch_specs
+from repro.distributed.sharding import tree_shardings
+from repro.train.optimizer import AdamWConfig
+from repro.train.train_step import TrainConfig, make_init_state, make_train_step
+
+mesh = make_production_mesh()
+cfg = dataclasses.replace(get_arch('deepseek-v3-671b'), param_dtype=jnp.bfloat16,
+                          compute_dtype=jnp.bfloat16, unroll_inner=True)
+model = build_model(cfg)
+tc = TrainConfig(opt=AdamWConfig(moment_dtype='int8'))
+state_abs = jax.eval_shape(make_init_state(model, tc), jax.random.key(0))
+sds, axes = split_tree(state_abs)
+sh = tree_shardings(mesh, sds, axes)
+batch_sds, batch_sh = train_batch_specs(cfg, SHAPES['train_4k'], mesh)
+step = make_train_step(model, tc)
+with mesh:
+    lowered = jax.jit(step, in_shardings=(sh, batch_sh), out_shardings=(sh, None), donate_argnums=(0,)).lower(sds, batch_sds)
+compiled = lowered.compile()
+ma = compiled.memory_analysis()
+print('temp GB:', ma.temp_size_in_bytes/1e9)
+txt = compiled.as_text()
+DT = {'f32':4,'bf16':2,'s32':4,'u32':4,'s8':1,'u8':1,'pred':1,'s64':8,'u64':8}
+sizes = Counter()
+for m in re.finditer(r'\b(f32|bf16|s32|u32|s8|u8|pred|s64|u64)\[([0-9,]+)\]', txt):
+    dims = [int(x) for x in m.group(2).split(',')]
+    n = 1
+    for d in dims: n *= d
+    bb = n * DT[m.group(1)]
+    if bb > 1e9:
+        sizes[(m.group(1), m.group(2))] += 1
+tot=0
+for (dt, shp), cnt in sizes.most_common(15):
+    dims=[int(x) for x in shp.split(',')]
+    n=1
+    for d in dims: n*=d
+    print(f"{dt}[{shp}] x{cnt}  {n*DT[dt]/1e9:.1f} GB each")

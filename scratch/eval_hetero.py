@@ -1,0 +1,41 @@
+import numpy as np, time, json
+from repro.data import make_dataset, make_label_workload, make_range_workload
+from repro.index import build_graph_index, filtered_knn_exact
+from repro.index.bruteforce import recall_at_k
+from repro.core import (SearchConfig, SearchEngine, BIG_BUDGET, generate_training_data,
+                        CostEstimator, e2e_search, baselines)
+from repro.filters.predicates import PRED_CONTAIN, PRED_EQUAL
+
+ds = make_dataset(n=20000, dim=64, n_clusters=24, alphabet_size=48, max_labels=3, seed=0)
+t0=time.time(); g = build_graph_index(ds.vectors, degree=32, seed=0)
+print('build', round(time.time()-t0,1), flush=True)
+eng = SearchEngine.build(ds, g)
+
+results = {}
+for kind, ptag in (('contain', PRED_CONTAIN), ('equal', PRED_EQUAL)):
+    cfg = SearchConfig(k=10, queue_size=1024, pred_kind=ptag, max_steps=80000)
+    wl_tr = make_label_workload(ds, batch=512, kind=kind, hard_fraction=0.5, seed=10)
+    t0=time.time()
+    td = generate_training_data(eng, ds, wl_tr, cfg, probe_budget=128, chunk=64)
+    print(kind, 'traindata', round(time.time()-t0,1), 's; W_q pct:',
+          np.percentile(td.w_q, [5,25,50,75,95,99]).round(0), 'conv', round(td.converged.mean(),3), flush=True)
+    est = CostEstimator.fit(td.features, td.w_q, n_trees=300, depth=5, learning_rate=0.08, min_child=10)
+    print(kind, 'train metrics:', {k: round(v,3) for k,v in est.eval_metrics(td.features, td.w_q).items()}, flush=True)
+
+    wl = make_label_workload(ds, batch=128, kind=kind, hard_fraction=0.5, seed=99)
+    gt_idx, gt_dist = filtered_knn_exact(wl.queries, ds.vectors, wl.spec, ds.labels_packed, ds.values, k=10)
+    # held-out estimator metrics
+    td_ev = generate_training_data(eng, ds, wl, cfg, probe_budget=128, chunk=64)
+    print(kind, 'TEST metrics:', {k: round(v,3) for k,v in est.eval_metrics(td_ev.features, td_ev.w_q).items()}, flush=True)
+    curves = {'e2e': [], 'naive': []}
+    for alpha in (0.75, 1.0, 1.5, 2.5, 4.0):
+        r = e2e_search(eng, est, cfg, wl.queries, wl.spec, probe_budget=128, alpha=alpha)
+        rec = recall_at_k(np.asarray(r.state.res_idx), gt_idx).mean()
+        curves['e2e'].append((float(np.asarray(r.state.cnt).mean()), float(rec)))
+    for ef in (64, 128, 256, 512, 1024):
+        st = baselines.naive_search(eng, cfg, wl.queries, wl.spec, ef)
+        rec = recall_at_k(np.asarray(st.res_idx), gt_idx).mean()
+        curves['naive'].append((float(np.asarray(st.cnt).mean()), float(rec)))
+    results[kind] = curves
+    print(kind, json.dumps(curves), flush=True)
+print('DONE')

@@ -1,0 +1,44 @@
+import numpy as np, time, json
+from repro.data import make_dataset, make_label_workload, make_range_workload
+from repro.index import build_graph_index, filtered_knn_exact
+from repro.index.bruteforce import recall_at_k
+from repro.core import (SearchConfig, SearchEngine, BIG_BUDGET, generate_training_data,
+                        CostEstimator, e2e_search, baselines)
+from repro.filters.predicates import PRED_CONTAIN, PRED_EQUAL
+
+ds = make_dataset(n=20000, dim=64, n_clusters=24, alphabet_size=48, max_labels=3, seed=0)
+g = build_graph_index(ds.vectors, degree=32, seed=0)
+eng = SearchEngine.build(ds, g)
+print('setup done', flush=True)
+
+for kind, ptag in (('contain', PRED_CONTAIN), ('equal', PRED_EQUAL)):
+    cfg = SearchConfig(k=10, queue_size=1024, pred_kind=ptag, max_steps=80000)
+    t0 = time.time()
+    wl_tr = make_label_workload(ds, batch=6144, kind=kind, hard_fraction=0.5, seed=10)
+    td = generate_training_data(eng, ds, wl_tr, cfg, probe_budget=128, chunk=256, n_probes=2)
+    print(kind, 'traindata', round(time.time()-t0,1), 's conv', round(td.converged.mean(),3), flush=True)
+    est = CostEstimator.fit(td.features, td.w_q, n_trees=500, depth=6, learning_rate=0.05,
+                            min_child=5, subsample=0.8)
+    estq = CostEstimator.fit(td.features, td.w_q, n_trees=500, depth=6, learning_rate=0.05,
+                             min_child=5, subsample=0.8, objective='quantile', tau=0.7)
+    wl = make_label_workload(ds, batch=256, kind=kind, hard_fraction=0.5, seed=99)
+    gt_idx, gt_dist = filtered_knn_exact(wl.queries, ds.vectors, wl.spec, ds.labels_packed, ds.values, k=10)
+    td_ev = generate_training_data(eng, ds, wl, cfg, probe_budget=128, chunk=256, n_probes=2)
+    print(kind, 'TEST mean-model:', {k: round(v,3) for k,v in est.eval_metrics(td_ev.features, td_ev.w_q).items()}, flush=True)
+    curves = {'e2e': [], 'e2e_q': [], 'naive': [], 'oracle': []}
+    for alpha in (0.75, 1.0, 1.5, 2.5, 4.0):
+        r = e2e_search(eng, est, cfg, wl.queries, wl.spec, probe_budget=128, alpha=alpha)
+        curves['e2e'].append((float(np.asarray(r.state.cnt).mean()),
+                             float(recall_at_k(np.asarray(r.state.res_idx), gt_idx).mean())))
+        r = e2e_search(eng, estq, cfg, wl.queries, wl.spec, probe_budget=128, alpha=alpha)
+        curves['e2e_q'].append((float(np.asarray(r.state.cnt).mean()),
+                               float(recall_at_k(np.asarray(r.state.res_idx), gt_idx).mean())))
+        st = baselines.oracle_search(eng, cfg, wl.queries, wl.spec, td_ev.w_q, alpha=alpha)
+        curves['oracle'].append((float(np.asarray(st.cnt).mean()),
+                                float(recall_at_k(np.asarray(st.res_idx), gt_idx).mean())))
+    for ef in (64, 128, 256, 512, 1024):
+        st = baselines.naive_search(eng, cfg, wl.queries, wl.spec, ef)
+        curves['naive'].append((float(np.asarray(st.cnt).mean()),
+                               float(recall_at_k(np.asarray(st.res_idx), gt_idx).mean())))
+    print(kind, json.dumps(curves), flush=True)
+print('DONE')

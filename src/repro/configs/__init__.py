@@ -1,0 +1,12 @@
+from repro.configs.base import ArchConfig, ShapeConfig, SHAPES, applicable_shapes
+from repro.configs.registry import ARCHS, get_arch, list_archs
+
+__all__ = [
+    "ArchConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "applicable_shapes",
+    "ARCHS",
+    "get_arch",
+    "list_archs",
+]

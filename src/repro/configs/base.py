@@ -1,0 +1,220 @@
+"""ArchConfig / ShapeConfig — the (architecture × input-shape) grid.
+
+Every assigned architecture is a frozen ArchConfig; `tiny()` derives the
+reduced same-family config used by CPU smoke tests. The four assigned
+input shapes are fixed ShapeConfigs; `applicable_shapes(cfg)` applies the
+documented skips (long_500k only for sub-quadratic archs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    d_ff: int = 0
+    vocab_size: int = 32000
+    head_dim: int = 0               # 0 -> d_model // n_heads
+
+    # --- attention pattern ---
+    attn_kind: str = "global"       # global | local | local_global
+    local_window: int = 4096
+    local_global_period: int = 0    # e.g. 6 => 5 local : 1 global
+
+    # --- MoE ---
+    n_experts: int = 0
+    top_k: int = 0
+    moe_d_ff: int = 0
+    n_shared_experts: int = 0
+    first_dense_layers: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+    # --- MLA (deepseek) ---
+    use_mla: bool = False
+    q_lora_rank: int = 0
+    kv_lora_rank: int = 0
+    qk_rope_dim: int = 0
+    qk_nope_dim: int = 0
+    v_head_dim: int = 0
+
+    # --- SSM (mamba2 family) ---
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # --- hybrid (zamba2): shared attn block after every `hybrid_period` ssm layers
+    hybrid_period: int = 0
+
+    # --- encoder-decoder (whisper) ---
+    n_encoder_layers: int = 0
+    encoder_seq: int = 1500         # stub audio frames
+
+    # --- vlm (llama-3.2-vision): cross-attn block every `cross_attn_period`
+    cross_attn_period: int = 0
+    vision_seq: int = 1601          # stub patch embeddings
+
+    # --- misc ---
+    norm_type: str = "rmsnorm"      # rmsnorm | layernorm | nonparam_ln
+    act: str = "silu"               # silu (gated) | gelu
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    mtp: bool = False               # deepseek multi-token prediction head
+    sub_quadratic: bool = False     # eligible for long_500k
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    remat: bool = True
+    scan_layers: bool = True
+    unroll_inner: bool = False      # unroll flash/SSD/CE chunk loops (roofline)
+    source: str = ""                # provenance note
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // max(self.n_heads, 1))
+
+    def with_dtypes(self, param_dtype, compute_dtype) -> "ArchConfig":
+        return dataclasses.replace(self, param_dtype=param_dtype,
+                                   compute_dtype=compute_dtype)
+
+    def n_params(self) -> int:
+        """Analytic parameter count (for 6ND roofline and memory napkin)."""
+        d, l = self.d_model, self.n_layers
+        total = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        for li in range(l):
+            total += self._layer_params(li)
+        if self.family == "encdec":
+            for _ in range(self.n_encoder_layers):
+                h = self.n_heads * self.hd
+                total += d * h * 2 + d * self.n_kv_heads * self.hd * 2  # attn
+                total += 2 * d * self.d_ff                              # mlp (gelu)
+        if self.family == "vlm" and self.cross_attn_period:
+            n_cross = l // self.cross_attn_period
+            h = self.n_heads * self.hd
+            total += n_cross * (d * h * 2 + d * self.n_kv_heads * self.hd * 2)
+        if self.mtp:
+            total += self._layer_params(l - 1)  # one extra block
+        return total
+
+    def _layer_params(self, li: int) -> int:
+        d = self.d_model
+        if self.family in ("ssm", "hybrid"):
+            di = self.ssm_expand * d
+            n = self.ssm_state
+            h = di // self.ssm_head_dim
+            p = 2 * d * di + 2 * d * n + d * h + di * d  # projections
+            if self.family == "hybrid" and self.hybrid_period:
+                # amortized shared attn+mlp block (single copy over all groups)
+                if li == 0:
+                    hh = self.n_heads * self.hd
+                    p += d * hh * 2 + d * self.n_kv_heads * self.hd * 2
+                    p += 3 * d * self.d_ff
+            return p
+        # attention
+        if self.use_mla:
+            qk = self.qk_nope_dim + self.qk_rope_dim
+            attn = (d * self.q_lora_rank + self.q_lora_rank * self.n_heads * qk
+                    + d * (self.kv_lora_rank + self.qk_rope_dim)
+                    + self.kv_lora_rank * self.n_heads * (self.qk_nope_dim + self.v_head_dim)
+                    + self.n_heads * self.v_head_dim * d)
+        else:
+            hh = self.n_heads * self.hd
+            attn = d * hh + 2 * d * self.n_kv_heads * self.hd + hh * d
+        # ffn
+        is_moe = self.n_experts > 0 and li >= self.first_dense_layers
+        if is_moe:
+            ffn = self.n_experts * 3 * d * self.moe_d_ff + d * self.n_experts
+            ffn += self.n_shared_experts * 3 * d * self.moe_d_ff
+        else:
+            n_gate = 3 if self.act == "silu" else 2
+            ffn = n_gate * d * self.d_ff
+        return attn + ffn
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE top-k counting)."""
+        if self.n_experts == 0:
+            return self.n_params()
+        d, l = self.d_model, self.n_layers
+        total = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        for li in range(l):
+            full = self._layer_params(li)
+            is_moe = li >= self.first_dense_layers
+            if is_moe:
+                routed = self.n_experts * 3 * d * self.moe_d_ff
+                active = self.top_k * 3 * d * self.moe_d_ff
+                full = full - routed + active
+            total += full
+        return total
+
+    def tiny(self) -> "ArchConfig":
+        """Reduced same-family config for CPU smoke tests."""
+        reps = dict(
+            n_layers=max(2, min(4, self.n_layers)),
+            d_model=64,
+            d_ff=128 if self.d_ff else 0,
+            vocab_size=256,
+            head_dim=16 if self.n_heads else 0,
+            n_heads=4 if self.n_heads else 0,
+            n_kv_heads=min(2, self.n_kv_heads) if self.n_kv_heads else 0,
+            local_window=32,
+            encoder_seq=24 if self.family == "encdec" else self.encoder_seq,
+            vision_seq=16 if self.family == "vlm" else self.vision_seq,
+            ssm_chunk=16 if self.ssm_state else self.ssm_chunk,
+            ssm_state=16 if self.ssm_state else 0,
+            ssm_head_dim=16 if self.ssm_state else self.ssm_head_dim,
+            scan_layers=self.scan_layers,
+        )
+        if self.n_experts:
+            reps.update(n_experts=4, top_k=min(2, self.top_k), moe_d_ff=64,
+                        first_dense_layers=min(1, self.first_dense_layers))
+        if self.use_mla:
+            reps.update(q_lora_rank=32, kv_lora_rank=32, qk_rope_dim=8,
+                        qk_nope_dim=16, v_head_dim=16)
+        if self.local_global_period:
+            reps.update(local_global_period=2)
+        if self.hybrid_period:
+            reps.update(hybrid_period=2)
+        if self.cross_attn_period:
+            reps.update(cross_attn_period=2)
+        if self.n_encoder_layers:
+            reps.update(n_encoder_layers=2)
+        # keep layer-count divisibility with periods
+        period = reps.get("local_global_period") or reps.get("hybrid_period") \
+            or reps.get("cross_attn_period")
+        if period:
+            reps["n_layers"] = 2 * period
+        return dataclasses.replace(self, **reps)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeConfig("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeConfig("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeConfig("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable_shapes(cfg: ArchConfig) -> list[str]:
+    """The assigned shape cells for this arch, applying documented skips."""
+    out = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.sub_quadratic:
+        out.append("long_500k")
+    return out

@@ -1,0 +1,40 @@
+# The paper's primary contribution: E2E cost estimation + adaptive
+# termination for filtered AKNN search, as a composable JAX module.
+from repro.core.search import SearchConfig, SearchState, run_search, init_state
+from repro.core.engine import SearchEngine, BIG_BUDGET
+from repro.core.features import (
+    extract_features,
+    ablate_filter_features,
+    FEATURE_NAMES,
+    FILTER_FEATURE_IDX,
+    N_FEATURES,
+)
+from repro.core.gbdt import GBDTModel, train_gbdt, predict_jax
+from repro.core.estimator import CostEstimator, spearman
+from repro.core.training import TrainingData, generate_training_data
+from repro.core.e2e import E2EResult, e2e_search
+from repro.core import baselines
+
+__all__ = [
+    "SearchConfig",
+    "SearchState",
+    "run_search",
+    "init_state",
+    "SearchEngine",
+    "BIG_BUDGET",
+    "extract_features",
+    "ablate_filter_features",
+    "FEATURE_NAMES",
+    "FILTER_FEATURE_IDX",
+    "N_FEATURES",
+    "GBDTModel",
+    "train_gbdt",
+    "predict_jax",
+    "CostEstimator",
+    "spearman",
+    "TrainingData",
+    "generate_training_data",
+    "E2EResult",
+    "e2e_search",
+    "baselines",
+]

@@ -1,0 +1,72 @@
+"""Baselines the paper compares against (§5, Figs. 5-7).
+
+  naive_search     Naive HNSW-style: conservative static configuration —
+                   beam width M (the efsearch analogue) swept over a grid,
+                   no budget termination. The paper's primary baseline.
+  fixed_budget     static global NDC budget (worst-case provisioning).
+  laet_search      LAET [28]-style learned termination: same probe+predict
+                   pipeline but with the Filter feature group removed
+                   (distance-only features) — the "w/o filter" ablation of
+                   Figs. 5/6 and the Feature-Filter-Misalignment victim.
+  oracle_search    lower bound: terminate exactly at the ground-truth W_q.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.e2e import E2EResult, e2e_search
+from repro.core.engine import BIG_BUDGET, SearchEngine
+from repro.core.estimator import CostEstimator
+from repro.core.search import SearchConfig, SearchState
+
+
+def naive_search(
+    engine: SearchEngine,
+    cfg: SearchConfig,
+    queries: np.ndarray,
+    spec,
+    ef: int,
+) -> SearchState:
+    """Static beam (efsearch) sweep point: queue_size=ef, unlimited budget."""
+    c = dataclasses.replace(cfg, queue_size=ef)
+    return engine.search(c, queries, spec, BIG_BUDGET)
+
+
+def fixed_budget_search(
+    engine: SearchEngine,
+    cfg: SearchConfig,
+    queries: np.ndarray,
+    spec,
+    budget: int,
+) -> SearchState:
+    return engine.search(cfg, queries, spec, budget)
+
+
+def laet_search(
+    engine: SearchEngine,
+    estimator_nofilter: CostEstimator,
+    cfg: SearchConfig,
+    queries: np.ndarray,
+    spec,
+    probe_budget: int = 64,
+    alpha: float = 1.0,
+) -> E2EResult:
+    """Distance-feature-only adaptive termination (filter group ablated)."""
+    return e2e_search(
+        engine, estimator_nofilter, cfg, queries, spec,
+        probe_budget=probe_budget, alpha=alpha, ablate_filter=True,
+    )
+
+
+def oracle_search(
+    engine: SearchEngine,
+    cfg: SearchConfig,
+    queries: np.ndarray,
+    spec,
+    w_q: np.ndarray,
+    alpha: float = 1.0,
+) -> SearchState:
+    budgets = np.maximum((alpha * w_q).astype(np.int64), 1)
+    return engine.search(cfg, queries, spec, budgets)

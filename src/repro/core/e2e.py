@@ -1,0 +1,117 @@
+"""E2E: probe → estimate → resume (paper Algorithm 1).
+
+The three stages of the framework (paper Fig. 4):
+  1. Early Probe   — run the lockstep search with per-lane budget f. The
+                     probe *is* the first f NDCs of the real traversal.
+  2. Cost Estimate — extract z_q from the live SearchState, run the GBDT,
+                     obtain Ŵ_q = α·exp(M(z_q)).
+  3. Adaptive Term — resume the identical loop carry with budget Ŵ_q.
+
+Also provides the DARTH-style iterative variant (`repredict_every` > 0):
+re-extract features and re-predict every Δ NDCs, stopping when the
+prediction no longer exceeds the spent budget.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.engine import BIG_BUDGET, SearchEngine
+from repro.core.estimator import CostEstimator
+from repro.core.features import ablate_filter_features, extract_features
+from repro.core.search import SearchConfig, SearchState
+
+
+@dataclasses.dataclass
+class E2EResult:
+    state: SearchState
+    predicted_budget: np.ndarray  # [B]
+    probe_features: np.ndarray    # [B, F]
+
+
+def probe_and_features(
+    engine: SearchEngine,
+    cfg: SearchConfig,
+    queries: np.ndarray,
+    spec,
+    probe_budget: int,
+    n_probes: int = 2,
+    gt_dist: np.ndarray | None = None,
+):
+    """Run the early probe and extract trajectory features.
+
+    With n_probes=2 (default), features are taken at budget f/2 and f and
+    concatenated as [z_f, z_f - z_{f/2}] — the deltas encode *convergence
+    speed* (how fast valid results accumulate / distances shrink), a signal
+    a single snapshot cannot carry. This is our beyond-paper extension of
+    the probe phase; n_probes=1 reproduces the paper exactly. The probe
+    remains zero-overhead: both snapshots are prefixes of the same
+    traversal carry.
+    """
+    import jax.numpy as jnp
+
+    if n_probes <= 1:
+        state = engine.search(cfg, queries, spec, probe_budget, gt_dist=gt_dist)
+        return state, extract_features(state)
+    state = engine.search(cfg, queries, spec, probe_budget // 2, gt_dist=gt_dist)
+    z1 = extract_features(state)
+    state = engine.search(cfg, queries, spec, probe_budget, state=state,
+                          gt_dist=gt_dist)
+    z2 = extract_features(state)
+    return state, jnp.concatenate([z2, z2 - z1], axis=1)
+
+
+def e2e_search(
+    engine: SearchEngine,
+    estimator: CostEstimator,
+    cfg: SearchConfig,
+    queries: np.ndarray,
+    spec,
+    probe_budget: int = 64,
+    alpha: float = 1.0,
+    min_budget: int = 32,
+    max_budget: int = BIG_BUDGET,
+    ablate_filter: bool = False,
+    repredict_every: int = 0,
+    max_repredict: int = 8,
+    n_probes: int = 2,
+) -> E2EResult:
+    # --- stage 1: early probe (zero overhead — same traversal carry) ---
+    state, feats = probe_and_features(engine, cfg, queries, spec, probe_budget,
+                                      n_probes)
+
+    # --- stage 2: cost estimation ---
+    if ablate_filter:
+        feats = ablate_filter_features(feats)
+    packed = estimator.packed()
+    budgets = estimator.predict_budget_jax(packed, feats, alpha, min_budget, max_budget)
+
+    # --- stage 3: adaptive termination (resume with predicted budget) ---
+    if repredict_every <= 0:
+        state = engine.search(cfg, queries, spec, budgets, state=state)
+    else:
+        # DARTH-style stepwise: advance Δ NDCs, re-predict, stop when the
+        # model says the spent budget suffices.
+        import jax.numpy as jnp
+
+        prev = extract_features(state)
+        for _ in range(max_repredict):
+            cur = np.asarray(state.cnt)
+            tgt = np.asarray(budgets)
+            if np.all(tgt <= cur):
+                break
+            step_budget = np.minimum(tgt, cur + repredict_every)
+            state = engine.search(cfg, queries, spec, step_budget, state=state)
+            znow = extract_features(state)
+            f2 = jnp.concatenate([znow, znow - prev], axis=1) if n_probes > 1 else znow
+            prev = znow
+            if ablate_filter:
+                f2 = ablate_filter_features(f2)
+            budgets = estimator.predict_budget_jax(packed, f2, alpha, min_budget, max_budget)
+
+    return E2EResult(
+        state=state,
+        predicted_budget=np.asarray(budgets),
+        probe_features=np.asarray(feats),
+    )

@@ -1,0 +1,63 @@
+"""SearchEngine — device-resident index + attribute store + traversal facade.
+
+Bundles the arrays every search needs (vectors, packed attributes, graph,
+entry point) and exposes probe/resume/search entry points used by the E2E
+pipeline, baselines, benchmarks and the serving layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.search import SearchConfig, SearchState, init_state, run_search
+from repro.data.synthetic import AttributedDataset
+from repro.filters.predicates import FilterSpec, PRED_RANGE
+from repro.index.graph import GraphIndex
+
+BIG_BUDGET = 1 << 30
+
+
+@dataclasses.dataclass
+class SearchEngine:
+    base_vectors: jnp.ndarray   # [N, d]
+    label_attrs: jnp.ndarray    # [N, W] uint32
+    value_attrs: jnp.ndarray    # [N] f32
+    neighbors: jnp.ndarray      # [N, R]
+    entry_point: int
+
+    @classmethod
+    def build(cls, ds: AttributedDataset, graph: GraphIndex) -> "SearchEngine":
+        return cls(
+            base_vectors=jnp.asarray(ds.vectors),
+            label_attrs=jnp.asarray(ds.labels_packed),
+            value_attrs=jnp.asarray(ds.values),
+            neighbors=jnp.asarray(graph.neighbors),
+            entry_point=graph.entry_point,
+        )
+
+    def _attr_args(self, spec: FilterSpec):
+        if spec.kind == PRED_RANGE:
+            return self.value_attrs, (jnp.asarray(spec.range_lo), jnp.asarray(spec.range_hi))
+        return self.label_attrs, jnp.asarray(spec.label_masks)
+
+    def search(
+        self,
+        cfg: SearchConfig,
+        queries: np.ndarray,
+        spec: FilterSpec,
+        budgets,                      # scalar or [B]
+        state: SearchState | None = None,
+        gt_dist: np.ndarray | None = None,
+    ) -> SearchState:
+        cfg = dataclasses.replace(cfg, degree=int(self.neighbors.shape[1]))
+        attrs, q_attr = self._attr_args(spec)
+        q = jnp.asarray(queries, jnp.float32)
+        b = q.shape[0]
+        budgets = jnp.broadcast_to(jnp.asarray(budgets, jnp.int32), (b,))
+        gt = None if gt_dist is None else jnp.asarray(gt_dist, jnp.float32)
+        return run_search(
+            cfg, q, q_attr, self.base_vectors, attrs, self.neighbors,
+            budgets, self.entry_point, state=state, gt_dist=gt,
+        )

@@ -1,0 +1,96 @@
+"""Cost estimator M: features z_q -> predicted search budget Ŵ_q.
+
+Implements the paper's §4.3 training strategy: regress log(W_q) with MSE
+(= MSLE in raw space, penalizing *relative* error across the heavy-tailed
+cost distribution), then at query time Ŵ_q = α · exp(M(z_q)). α ≥ 1 is the
+recall knob that sweeps the recall-vs-cost tradeoff (Figs. 5/6).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gbdt import GBDTModel, predict_jax, train_gbdt
+
+
+@dataclasses.dataclass
+class CostEstimator:
+    model: GBDTModel
+    log_target: bool = True
+
+    @classmethod
+    def fit(
+        cls,
+        features: np.ndarray,  # [n, F]
+        w_q: np.ndarray,       # [n] ground-truth NDC at full recall
+        log_target: bool = True,
+        **gbdt_kwargs,
+    ) -> "CostEstimator":
+        y = np.log(np.maximum(w_q, 1.0)) if log_target else np.asarray(w_q, np.float64)
+        model = train_gbdt(features, y, **gbdt_kwargs)
+        return cls(model=model, log_target=log_target)
+
+    # ---- host-side ----
+    def predict_cost(self, features: np.ndarray) -> np.ndarray:
+        p = self.model.predict(np.asarray(features, np.float32))
+        return np.exp(p) if self.log_target else p
+
+    # ---- device-side (jit-compatible; used inside the serving pipeline) ----
+    def packed(self):
+        return self.model.pack_jax()
+
+    def predict_budget_jax(
+        self,
+        packed,
+        features: jax.Array,
+        alpha: float,
+        min_budget: int,
+        max_budget: int,
+    ) -> jax.Array:
+        p = predict_jax(packed, features, self.model.depth)
+        w = jnp.exp(p) if self.log_target else p
+        w = jnp.clip(alpha * w, float(min_budget), float(max_budget))
+        return w.astype(jnp.int32)
+
+    def eval_metrics(self, features: np.ndarray, w_q: np.ndarray) -> dict:
+        """Table-3 metrics: Log-RMSE, R² (log space), Spearman ρ."""
+        y = np.log(np.maximum(w_q, 1.0))
+        p = self.model.predict(np.asarray(features, np.float32))
+        if not self.log_target:
+            p = np.log(np.maximum(p, 1.0))
+        err = p - y
+        log_rmse = float(np.sqrt(np.mean(err**2)))
+        ss_res = float(np.sum(err**2))
+        ss_tot = float(np.sum((y - y.mean()) ** 2)) + 1e-12
+        r2 = 1.0 - ss_res / ss_tot
+        rho = spearman(p, y)
+        return dict(log_rmse=log_rmse, r2=r2, spearman=rho)
+
+
+def spearman(a: np.ndarray, b: np.ndarray) -> float:
+    """Spearman rank correlation (average ranks for ties)."""
+
+    def ranks(v):
+        order = np.argsort(v, kind="stable")
+        r = np.empty_like(order, dtype=np.float64)
+        r[order] = np.arange(len(v))
+        # average ties
+        sv = v[order]
+        i = 0
+        while i < len(sv):
+            j = i
+            while j + 1 < len(sv) and sv[j + 1] == sv[i]:
+                j += 1
+            if j > i:
+                r[order[i : j + 1]] = (i + j) / 2.0
+            i = j + 1
+        return r
+
+    ra, rb = ranks(np.asarray(a)), ranks(np.asarray(b))
+    ra -= ra.mean()
+    rb -= rb.mean()
+    denom = np.sqrt((ra**2).sum() * (rb**2).sum()) + 1e-12
+    return float((ra * rb).sum() / denom)

@@ -1,0 +1,163 @@
+"""Runtime feature extraction (paper Table 1) from a `SearchState`.
+
+Four groups — Global, Filter (ours), Queue (DARTH/LAET-adapted), Result-set
+(DARTH/LAET-adapted) — computed entirely from the sorted fixed-size buffers,
+so extraction is O(M) elementwise work per lane and jit-compatible (it runs
+between the probe and the adaptive-termination phases with no host sync).
+
+Sentinels: lanes with empty queues / result sets fall back to d_start-scaled
+defaults (GBDT is insensitive to the exact choice; it just needs a
+consistent encoding).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.search import SearchState
+
+FEATURE_NAMES: tuple[str, ...] = (
+    # --- Global (LAET†) ---
+    "d_start",
+    "n_hops",
+    "log_cnt",
+    # --- Filter (ours*) ---
+    "rho_pilot",
+    "rho_queue",
+    "rho_pop",
+    # --- Queue (DARTH‡ / LAET†) ---
+    "d_queue_head",
+    "d_queue_tail",
+    "r_queue_head",
+    "r_queue_tail",
+    "avg_queue",
+    "var_queue",
+    "perc25_queue",
+    "perc50_queue",
+    "perc75_queue",
+    "queue_fill",
+    # --- Result set (DARTH‡ / LAET†) ---
+    "d_nn_first",
+    "d_nn_last",
+    "r_nn_first",
+    "r_nn_last",
+    "avg_nn",
+    "var_nn",
+    "perc25_nn",
+    "perc50_nn",
+    "perc75_nn",
+    "res_fill",
+    # --- progression (ours*) ---
+    "log_res_full_cnt",   # NDC at which the k-th valid appeared (sentinel: 2·cnt)
+    "gap_queue_nn",       # (d_queue_tail - d_nn_last)/d_start — frontier vs results
+)
+
+N_FEATURES = len(FEATURE_NAMES)
+
+# Feature indices that constitute the paper's novel Filter group — the
+# no-filter-features ablation (paper Figs. 5/6 "w/o filter") zeroes these.
+# (includes the progression features, which are also filter-derived: they
+# measure how fast *valid* results accumulate)
+FILTER_FEATURE_IDX = (3, 4, 5, 26, 27)
+
+
+def _stats_sorted(dist: jax.Array, d_start: jax.Array):
+    """Stats over the finite prefix of an ascending-sorted [B, M] buffer."""
+    b, m = dist.shape
+    finite = jnp.isfinite(dist)
+    count = finite.sum(axis=1)                                # [B]
+    has = count > 0
+    safe_count = jnp.maximum(count, 1)
+
+    head = jnp.where(has, dist[:, 0], d_start)
+    tail_ix = jnp.clip(count - 1, 0, m - 1)
+    tail = jnp.take_along_axis(dist, tail_ix[:, None], axis=1)[:, 0]
+    tail = jnp.where(has, tail, d_start)
+
+    dz = jnp.where(finite, dist, 0.0)
+    s1 = dz.sum(axis=1)
+    s2 = (dz * dz).sum(axis=1)
+    mean = s1 / safe_count
+    var = jnp.maximum(s2 / safe_count - mean * mean, 0.0)
+    mean = jnp.where(has, mean, d_start)
+    var = jnp.where(has, var, 0.0)
+
+    percs = []
+    for qq in (0.25, 0.5, 0.75):
+        ix = jnp.clip(jnp.round(qq * (count - 1)).astype(jnp.int32), 0, m - 1)
+        pv = jnp.take_along_axis(dist, ix[:, None], axis=1)[:, 0]
+        percs.append(jnp.where(has, pv, d_start))
+    fill = count.astype(jnp.float32) / m
+    return head, tail, mean, var, percs, fill
+
+
+def extract_features(state: SearchState) -> jax.Array:
+    """SearchState -> [B, N_FEATURES] float32 feature matrix z_q."""
+    ds = jnp.maximum(state.d_start, 1e-12)
+
+    qh, qt, qm, qv, qp, qfill = _stats_sorted(state.cand_dist, state.d_start)
+    rh, rt, rm, rv, rp, rfill = _stats_sorted(state.res_dist, state.d_start)
+
+    in_q = state.cand_idx >= 0
+    nq = jnp.maximum(in_q.sum(axis=1), 1)
+    rho_queue = (state.cand_valid & in_q).sum(axis=1) / nq
+    rho_pilot = state.n_valid_visited / jnp.maximum(state.n_inspected, 1)
+    rho_pop = state.n_pop_valid / jnp.maximum(state.hops, 1)
+
+    feats = jnp.stack(
+        [
+            state.d_start,
+            state.hops.astype(jnp.float32),
+            jnp.log1p(state.cnt.astype(jnp.float32)),
+            rho_pilot.astype(jnp.float32),
+            rho_queue.astype(jnp.float32),
+            rho_pop.astype(jnp.float32),
+            qh,
+            qt,
+            qh / ds,
+            qt / ds,
+            qm,
+            qv,
+            qp[0],
+            qp[1],
+            qp[2],
+            qfill,
+            rh,
+            rt,
+            rh / ds,
+            rt / ds,
+            rm,
+            rv,
+            rp[0],
+            rp[1],
+            rp[2],
+            rfill,
+            jnp.log1p(
+                jnp.where(state.res_full_cnt >= 0, state.res_full_cnt, 2 * state.cnt)
+                .astype(jnp.float32)
+            ),
+            (qt - rt) / ds,
+        ],
+        axis=1,
+    )
+    return feats.astype(jnp.float32)
+
+
+def ablate_filter_features(feats: jax.Array) -> jax.Array:
+    """Zero the paper's filter-aware features (the Figs. 5/6 ablation).
+
+    Handles multi-probe concatenated feature vectors ([z, Δz] stacking of
+    the base block): the filter indices are zeroed in every block.
+    """
+    out = feats
+    n_blocks = feats.shape[1] // N_FEATURES
+    for b in range(n_blocks):
+        for ix in FILTER_FEATURE_IDX:
+            out = out.at[:, b * N_FEATURES + ix].set(0.0)
+    return out
+
+
+def feature_names(n_probes: int = 2) -> list[str]:
+    if n_probes <= 1:
+        return list(FEATURE_NAMES)
+    return list(FEATURE_NAMES) + [f"d_{n}" for n in FEATURE_NAMES]

@@ -1,0 +1,79 @@
+"""Ground-truth W_q generation + estimator training (paper §4.3).
+
+For each training query: run the probe (budget = f NDC) and snapshot the
+feature vector z_q, then *continue the same traversal* with an effectively
+unlimited budget while tracking `conv_cnt` — the NDC at which the result set
+first covers the bruteforce filtered top-k (recall = 1.0). That NDC is the
+regression target W_q.
+
+Queries whose ground truth is unreachable through the graph (filtered
+sub-graph disconnection — exactly the paper's PreFiltering pathology) never
+converge; for them W_q = the NDC at search exhaustion, i.e. the true cost
+of the maximal traversal. This matches the paper's "fixed and large enough
+budget" protocol.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.engine import BIG_BUDGET, SearchEngine
+from repro.core.features import extract_features
+from repro.core.search import SearchConfig
+from repro.data.synthetic import AttributedDataset, QueryWorkload
+from repro.index.bruteforce import filtered_knn_exact
+
+
+@dataclasses.dataclass
+class TrainingData:
+    features: np.ndarray   # [n, F]
+    w_q: np.ndarray        # [n]
+    converged: np.ndarray  # [n] bool
+    gt_idx: np.ndarray     # [n, k]
+    gt_dist: np.ndarray    # [n, k]
+
+
+def generate_training_data(
+    engine: SearchEngine,
+    ds: AttributedDataset,
+    workload: QueryWorkload,
+    cfg: SearchConfig,
+    probe_budget: int = 64,
+    chunk: int = 64,
+    n_probes: int = 2,
+) -> TrainingData:
+    from repro.core.e2e import probe_and_features
+
+    n = workload.batch
+    feats, wq, conv, gti, gtd = [], [], [], [], []
+    for s in range(0, n, chunk):
+        e = min(s + chunk, n)
+        q = workload.queries[s:e]
+        spec = workload.spec.slice(slice(s, e))
+        gt_idx, gt_dist = filtered_knn_exact(
+            q, np.asarray(engine.base_vectors), spec,
+            np.asarray(engine.label_attrs), np.asarray(engine.value_attrs), cfg.k,
+        )
+        # probe phase (budget = f) -> trajectory features
+        st, z = probe_and_features(engine, cfg, q, spec, probe_budget,
+                                   n_probes, gt_dist=gt_dist)
+        z = np.asarray(z)
+        # resume to exhaustion, tracking convergence NDC
+        st = engine.search(cfg, q, spec, BIG_BUDGET, state=st, gt_dist=gt_dist)
+        cc = np.asarray(st.conv_cnt)
+        cnt = np.asarray(st.cnt)
+        converged = cc > 0
+        w = np.where(converged, cc, cnt).astype(np.int64)
+        feats.append(z)
+        wq.append(w)
+        conv.append(converged)
+        gti.append(gt_idx)
+        gtd.append(gt_dist)
+    return TrainingData(
+        features=np.concatenate(feats),
+        w_q=np.concatenate(wq),
+        converged=np.concatenate(conv),
+        gt_idx=np.concatenate(gti),
+        gt_dist=np.concatenate(gtd),
+    )

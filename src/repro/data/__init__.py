@@ -1,0 +1,19 @@
+from repro.data.synthetic import (
+    AttributedDataset,
+    QueryWorkload,
+    make_dataset,
+    make_label_workload,
+    make_range_workload,
+    DATASET_PRESETS,
+    make_preset,
+)
+
+__all__ = [
+    "AttributedDataset",
+    "QueryWorkload",
+    "make_dataset",
+    "make_label_workload",
+    "make_range_workload",
+    "DATASET_PRESETS",
+    "make_preset",
+]

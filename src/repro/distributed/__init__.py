@@ -1,0 +1,10 @@
+from repro.distributed.sharding import (
+    ShardingRules,
+    DEFAULT_RULES,
+    spec_for,
+    tree_shardings,
+    batch_spec,
+)
+
+__all__ = ["ShardingRules", "DEFAULT_RULES", "spec_for", "tree_shardings",
+           "batch_spec"]

@@ -1,0 +1,93 @@
+"""Fault tolerance & straggler mitigation for 1000+ node deployments.
+
+Three mechanisms:
+
+1. **Elastic mesh selection** — after a node failure the job restarts on
+   whatever device count survives; `best_mesh_shape` picks the largest
+   usable (pod, data, model) factorization and `CheckpointManager.restore`
+   reshards the state onto it (see train/checkpoint.py).
+
+2. **Step watchdog** — `StepMonitor` tracks per-step wall times; a step
+   exceeding `factor` × trailing-median flags a straggler event. On a real
+   cluster this triggers the preplanned-rollback path (restore from the
+   last checkpoint minus the slow host); here it drives tests and logs.
+
+3. **Search-tail clamping** — the paper's own tail-latency story applied
+   at the batch level: in lockstep filtered search, one hard query holds
+   every lane of its batch. `clamp_budgets` caps per-lane predicted budgets
+   at a batch quantile so the predicted tail is bounded; the clamped lanes
+   are reported so the serving layer can re-queue them into a dedicated
+   "hard query" batch (two-tier scheduling) instead of stalling the fleet.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+
+def best_mesh_shape(n_devices: int, model_parallel: int = 16,
+                    pod_size: int = 256) -> tuple[tuple, tuple]:
+    """Largest (pod, data, model) mesh using ≤ n_devices.
+
+    model is fixed by the arch sharding (TP degree); pods are whole
+    multiples of pod_size; leftover chips form the data axis.
+    """
+    if n_devices >= 2 * pod_size:
+        pods = n_devices // pod_size
+        data = pod_size // model_parallel
+        return (pods, data, model_parallel), ("pod", "data", "model")
+    model = min(model_parallel, n_devices)
+    data = max(1, n_devices // model)
+    return (data, model), ("data", "model")
+
+
+@dataclasses.dataclass
+class StragglerEvent:
+    step: int
+    duration: float
+    median: float
+
+
+class StepMonitor:
+    def __init__(self, factor: float = 3.0, window: int = 32):
+        self.factor = factor
+        self.window = window
+        self.durations: list[float] = []
+        self.events: list[StragglerEvent] = []
+        self._t0 = None
+        self._step = 0
+
+    def start(self):
+        self._t0 = time.monotonic()
+
+    def stop(self) -> StragglerEvent | None:
+        dt = time.monotonic() - self._t0
+        self._step += 1
+        ev = self.observe(self._step, dt)
+        return ev
+
+    def observe(self, step: int, duration: float) -> StragglerEvent | None:
+        hist = self.durations[-self.window:]
+        self.durations.append(duration)
+        if len(hist) >= 8:
+            med = float(np.median(hist))
+            if duration > self.factor * med:
+                ev = StragglerEvent(step=step, duration=duration, median=med)
+                self.events.append(ev)
+                return ev
+        return None
+
+
+def clamp_budgets(budgets: np.ndarray, quantile: float = 0.95,
+                  floor: int = 1) -> tuple[np.ndarray, np.ndarray]:
+    """Cap per-lane search budgets at the batch quantile.
+
+    Returns (clamped budgets, mask of lanes that were clamped — candidates
+    for the hard-query re-queue).
+    """
+    budgets = np.asarray(budgets)
+    cap = max(float(np.quantile(budgets, quantile)), floor)
+    clamped = np.minimum(budgets, cap).astype(budgets.dtype)
+    return clamped, budgets > cap

@@ -1,0 +1,23 @@
+from repro.filters.predicates import (
+    FilterSpec,
+    pack_labels,
+    predicate_contains,
+    predicate_equals,
+    predicate_range,
+    evaluate_predicate,
+    PRED_CONTAIN,
+    PRED_EQUAL,
+    PRED_RANGE,
+)
+
+__all__ = [
+    "FilterSpec",
+    "pack_labels",
+    "predicate_contains",
+    "predicate_equals",
+    "predicate_range",
+    "evaluate_predicate",
+    "PRED_CONTAIN",
+    "PRED_EQUAL",
+    "PRED_RANGE",
+]

@@ -1,0 +1,127 @@
+"""Filter predicates for attributed vector datasets (paper §2.1).
+
+Label sets are stored as packed multi-hot bitmasks (uint32 words) so that
+containment / equality tests are pure bitwise ops — O(W) per item with
+W = ceil(|alphabet| / 32), fully vectorizable on TPU VPU lanes.
+
+Numeric attributes are plain float32 scalars; range predicates are two
+comparisons.
+
+All predicate functions are jnp-traceable and broadcast over arbitrary
+leading batch dimensions:
+
+  item_labels:  [..., W] uint32
+  query_mask:   [W]      uint32  (or [..., W] broadcastable)
+  item_value:   [...]    float32
+  query_range:  (lo, hi) scalars (or broadcastable arrays)
+
+The search engine is *predicate-agnostic* (paper §2.1 Remark): it only ever
+consumes the boolean output of `evaluate_predicate`, so composite filters can
+be added by composing these primitives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import jax.numpy as jnp
+import numpy as np
+
+# Predicate type tags (static ints so they can be closed over by jit).
+PRED_CONTAIN = 0  # L_q ⊆ A_i
+PRED_EQUAL = 1    # L_q = A_i
+PRED_RANGE = 2    # A_i ∈ [lo, hi]
+
+
+def pack_labels(label_sets: Sequence[Sequence[int]], alphabet_size: int) -> np.ndarray:
+    """Pack per-item label sets into [N, W] uint32 multi-hot bitmasks."""
+    n_words = max(1, (alphabet_size + 31) // 32)
+    out = np.zeros((len(label_sets), n_words), dtype=np.uint32)
+    for i, labels in enumerate(label_sets):
+        for lab in labels:
+            if not 0 <= lab < alphabet_size:
+                raise ValueError(f"label {lab} outside alphabet [0,{alphabet_size})")
+            out[i, lab // 32] |= np.uint32(1) << np.uint32(lab % 32)
+    return out
+
+
+def pack_query_labels(labels: Sequence[int], alphabet_size: int) -> np.ndarray:
+    """Pack one query label set into a [W] uint32 mask."""
+    return pack_labels([labels], alphabet_size)[0]
+
+
+def predicate_contains(item_labels, query_mask):
+    """L_q ⊆ A_i  ⇔  (A_i & L_q) == L_q, reduced over mask words."""
+    hit = jnp.bitwise_and(item_labels, query_mask) == query_mask
+    return jnp.all(hit, axis=-1)
+
+
+def predicate_equals(item_labels, query_mask):
+    """L_q = A_i exactly (all words equal)."""
+    return jnp.all(item_labels == query_mask, axis=-1)
+
+
+def predicate_range(item_value, lo, hi):
+    """A_i ∈ [lo, hi] (closed interval)."""
+    return jnp.logical_and(item_value >= lo, item_value <= hi)
+
+
+@dataclasses.dataclass(frozen=True)
+class FilterSpec:
+    """A batched filter workload.
+
+    Exactly one of (label_masks) or (range_lo, range_hi) is set, matching
+    `kind`. Arrays carry a leading query-batch dimension [B, ...] so a batch
+    of queries can each have a *different* filter.
+    """
+
+    kind: int  # PRED_CONTAIN | PRED_EQUAL | PRED_RANGE
+    label_masks: np.ndarray | None = None  # [B, W] uint32
+    range_lo: np.ndarray | None = None     # [B] float32
+    range_hi: np.ndarray | None = None     # [B] float32
+
+    @property
+    def batch(self) -> int:
+        if self.kind == PRED_RANGE:
+            return int(self.range_lo.shape[0])
+        return int(self.label_masks.shape[0])
+
+    def slice(self, sl) -> "FilterSpec":
+        if self.kind == PRED_RANGE:
+            return FilterSpec(self.kind, None, self.range_lo[sl], self.range_hi[sl])
+        return FilterSpec(self.kind, self.label_masks[sl], None, None)
+
+
+def evaluate_predicate(kind: int, node_attr, query_attr, node_ids=None):
+    """Evaluate predicate for a batch of queries against gathered node attrs.
+
+    kind        static predicate tag
+    node_attr   labels  [B, R, W] uint32   (gathered per-lane candidates)
+                or vals [B, R]    float32
+    query_attr  masks   [B, W] uint32  or (lo[B], hi[B]) tuple
+    returns     [B, R] bool
+    """
+    if kind == PRED_CONTAIN:
+        return predicate_contains(node_attr, query_attr[:, None, :])
+    if kind == PRED_EQUAL:
+        return predicate_equals(node_attr, query_attr[:, None, :])
+    if kind == PRED_RANGE:
+        lo, hi = query_attr
+        return predicate_range(node_attr, lo[:, None], hi[:, None])
+    raise ValueError(f"unknown predicate kind {kind}")
+
+
+def selectivity(spec: FilterSpec, labels_packed: np.ndarray | None,
+                values: np.ndarray | None) -> np.ndarray:
+    """Global selectivity σ_global per query (paper Def. 2.6), on host."""
+    if spec.kind == PRED_RANGE:
+        v = values[None, :]  # [1, N]
+        ok = (v >= spec.range_lo[:, None]) & (v <= spec.range_hi[:, None])
+        return ok.mean(axis=1)
+    masks = spec.label_masks[:, None, :]  # [B,1,W]
+    items = labels_packed[None, :, :]     # [1,N,W]
+    if spec.kind == PRED_CONTAIN:
+        ok = ((items & masks) == masks).all(axis=-1)
+    else:
+        ok = (items == masks).all(axis=-1)
+    return ok.mean(axis=1)

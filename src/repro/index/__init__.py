@@ -1,0 +1,5 @@
+from repro.index.graph import GraphIndex
+from repro.index.builder import build_graph_index
+from repro.index.bruteforce import filtered_knn_exact, knn_exact
+
+__all__ = ["GraphIndex", "build_graph_index", "filtered_knn_exact", "knn_exact"]

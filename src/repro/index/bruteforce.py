@@ -1,0 +1,82 @@
+"""Exact (filtered) KNN oracle — ground truth for recall and for W_q labels."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.filters.predicates import FilterSpec, PRED_CONTAIN, PRED_EQUAL, PRED_RANGE
+
+
+def _pairwise_sqdist(queries: np.ndarray, base: np.ndarray, block: int = 4096) -> np.ndarray:
+    """[B, N] squared L2, blocked over N to bound memory."""
+    b = queries.shape[0]
+    n = base.shape[0]
+    out = np.empty((b, n), dtype=np.float32)
+    qn = (queries**2).sum(axis=1, keepdims=True)
+    for s in range(0, n, block):
+        e = min(s + block, n)
+        blk = base[s:e]
+        out[:, s:e] = qn + (blk**2).sum(axis=1)[None, :] - 2.0 * queries @ blk.T
+    np.maximum(out, 0.0, out=out)
+    return out
+
+
+def valid_mask(spec: FilterSpec, labels_packed: np.ndarray, values: np.ndarray) -> np.ndarray:
+    """[B, N] bool validity of every base item for every query filter."""
+    if spec.kind == PRED_RANGE:
+        v = values[None, :]
+        return (v >= spec.range_lo[:, None]) & (v <= spec.range_hi[:, None])
+    masks = spec.label_masks[:, None, :]
+    items = labels_packed[None, :, :]
+    if spec.kind == PRED_CONTAIN:
+        return ((items & masks) == masks).all(axis=-1)
+    if spec.kind == PRED_EQUAL:
+        return (items == masks).all(axis=-1)
+    raise ValueError(spec.kind)
+
+
+def knn_exact(queries: np.ndarray, base: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Unfiltered exact top-k. Returns (idx[B,k], dist[B,k]) ascending."""
+    d2 = _pairwise_sqdist(queries, base)
+    idx = np.argpartition(d2, kth=min(k, d2.shape[1] - 1), axis=1)[:, :k]
+    dd = np.take_along_axis(d2, idx, axis=1)
+    order = np.argsort(dd, axis=1, kind="stable")
+    return np.take_along_axis(idx, order, axis=1), np.take_along_axis(dd, order, axis=1)
+
+
+def filtered_knn_exact(
+    queries: np.ndarray,
+    base: np.ndarray,
+    spec: FilterSpec,
+    labels_packed: np.ndarray,
+    values: np.ndarray,
+    k: int,
+) -> tuple[np.ndarray, np.ndarray]:
+    """Exact filtered top-k (paper Def. 2.5).
+
+    Returns (idx[B,k], dist[B,k]) ascending; rows with fewer than k valid
+    items are padded with idx=-1, dist=+inf.
+    """
+    d2 = _pairwise_sqdist(queries, base)
+    ok = valid_mask(spec, labels_packed, values)
+    d2 = np.where(ok, d2, np.inf)
+    idx = np.argpartition(d2, kth=min(k, d2.shape[1] - 1), axis=1)[:, :k]
+    dd = np.take_along_axis(d2, idx, axis=1)
+    order = np.argsort(dd, axis=1, kind="stable")
+    idx = np.take_along_axis(idx, order, axis=1)
+    dd = np.take_along_axis(dd, order, axis=1)
+    idx = np.where(np.isinf(dd), -1, idx)
+    return idx.astype(np.int32), dd.astype(np.float32)
+
+
+def recall_at_k(found_idx: np.ndarray, gt_idx: np.ndarray) -> np.ndarray:
+    """Recall@k per query; -1 padding in gt shrinks the denominator."""
+    b, k = gt_idx.shape
+    rec = np.zeros(b, dtype=np.float64)
+    for i in range(b):
+        gt = set(int(x) for x in gt_idx[i] if x >= 0)
+        if not gt:
+            rec[i] = 1.0
+            continue
+        got = set(int(x) for x in found_idx[i] if x >= 0)
+        rec[i] = len(gt & got) / len(gt)
+    return rec

@@ -1,0 +1,55 @@
+"""Fixed-degree proximity-graph container.
+
+TPU-friendly representation: one dense int32 array `neighbors[N, R]`
+(padded with -1). Fixed out-degree makes every traversal step a static-shape
+gather + distance block, which is what the lockstep search engine and the
+Pallas distance kernel consume.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class GraphIndex:
+    neighbors: np.ndarray  # [N, R] int32, -1 padded
+    entry_point: int       # medoid node id
+    dim: int
+
+    @property
+    def n(self) -> int:
+        return self.neighbors.shape[0]
+
+    @property
+    def degree(self) -> int:
+        return self.neighbors.shape[1]
+
+    def out_degrees(self) -> np.ndarray:
+        return (self.neighbors >= 0).sum(axis=1)
+
+    def validate(self) -> None:
+        n, r = self.neighbors.shape
+        assert self.neighbors.dtype == np.int32
+        assert self.neighbors.max() < n
+        assert self.neighbors.min() >= -1
+        # no self loops among valid entries
+        rows = np.arange(n)[:, None]
+        valid = self.neighbors >= 0
+        assert not np.any((self.neighbors == rows) & valid), "self loop"
+        assert 0 <= self.entry_point < n
+
+    def save(self, path: str) -> None:
+        np.savez_compressed(
+            path, neighbors=self.neighbors, entry_point=self.entry_point, dim=self.dim
+        )
+
+    @staticmethod
+    def load(path: str) -> "GraphIndex":
+        z = np.load(path)
+        return GraphIndex(
+            neighbors=z["neighbors"].astype(np.int32),
+            entry_point=int(z["entry_point"]),
+            dim=int(z["dim"]),
+        )

@@ -1,0 +1,38 @@
+"""jit'd wrappers around the Pallas kernels with automatic CPU fallback.
+
+On a TPU backend the kernels run compiled (Mosaic); on this CPU container
+they execute in `interpret=True` mode — the kernel body runs in Python on
+CPU, which validates semantics (tests assert allclose vs ref.py) while the
+BlockSpec tiling remains the TPU-target source of truth.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import distance as _distance
+from repro.kernels import gbdt as _gbdt
+from repro.kernels import topk as _topk
+from repro.kernels.topk import pack_payload, unpack_payload  # re-export
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def batched_sqdist(q, x, mask=None):
+    """q [B,d], x [B,R,d] -> [B,R] squared L2 (+inf where ~mask)."""
+    if mask is None:
+        mask = jnp.ones(x.shape[:2], bool)
+    return _distance.sqdist_masked(q, x, mask, interpret=_interpret())
+
+
+def queue_merge(dist, payload, new_dist, new_payload):
+    return _topk.topm_merge(dist, payload, new_dist, new_payload,
+                            interpret=_interpret())
+
+
+def estimator_predict(feats, packed_model, depth):
+    feat_idx, thresh, leaf, base = packed_model
+    return _gbdt.gbdt_predict(feats, feat_idx, thresh, leaf, base, depth,
+                              interpret=_interpret())

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF = jnp.float32(jnp.inf)
+
+
+def sqdist_masked_ref(q, x, mask):
+    """q [B,d], x [B,R,d], mask [B,R] -> [B,R] f32 squared L2, +inf masked."""
+    qn = jnp.sum(q.astype(jnp.float32) ** 2, axis=-1)[:, None]
+    xn = jnp.sum(x.astype(jnp.float32) ** 2, axis=-1)
+    qx = jnp.einsum("bd,brd->br", q.astype(jnp.float32), x.astype(jnp.float32))
+    d = jnp.maximum(qn + xn - 2.0 * qx, 0.0)
+    return jnp.where(mask, d, INF)
+
+
+def _bitonic_stages(n):
+    """(stride, direction-block) pairs of a bitonic sorting network of width n."""
+    stages = []
+    k = 2
+    while k <= n:
+        j = k // 2
+        while j >= 1:
+            stages.append((j, k))
+            j //= 2
+        k *= 2
+    return stages
+
+
+def bitonic_sort_kv(keys, vals):
+    """Ascending bitonic sort of keys [B, N] (N power of 2) carrying vals."""
+    b, n = keys.shape
+    assert n & (n - 1) == 0, "width must be a power of two"
+    idx = jnp.arange(n)
+    for j, k in _bitonic_stages(n):
+        partner = idx ^ j
+        asc = (idx & k) == 0
+        k_self, k_part = keys, keys[:, partner]
+        v_self, v_part = vals, vals[:, partner]
+        first = idx < partner
+        keep_self = jnp.where(
+            first,
+            jnp.where(asc, k_self <= k_part, k_self >= k_part),
+            jnp.where(asc, k_part <= k_self, k_part >= k_self),
+        )
+        keys = jnp.where(keep_self, k_self, k_part)
+        vals = jnp.where(keep_self, v_self, v_part)
+    return keys, vals
+
+
+def topm_merge_ref(dist, payload, new_dist, new_payload):
+    """Merge sorted [B,M] buffer with [B,R] candidates -> best-M (bitonic).
+
+    payloads are int32 (packed idx+flags) carried through the sort.
+    """
+    b, m = dist.shape
+    r = new_dist.shape[1]
+    width = 1 << (m + r - 1).bit_length()
+    pad = width - (m + r)
+    keys = jnp.concatenate(
+        [dist, new_dist, jnp.full((b, pad), INF)], axis=1)
+    vals = jnp.concatenate(
+        [payload, new_payload, jnp.full((b, pad), -1, jnp.int32)], axis=1)
+    keys, vals = bitonic_sort_kv(keys, vals)
+    return keys[:, :m], vals[:, :m]
+
+
+def gbdt_predict_ref(feats, feat_idx, thresh, leaf, base, depth):
+    """feats [B,F] -> [B]; complete heap-packed trees (see core.gbdt)."""
+    b = feats.shape[0]
+    t = feat_idx.shape[0]
+    n_internal = feat_idx.shape[1]
+    t_ix = jnp.arange(t)[None, :]
+    idx = jnp.zeros((b, t), jnp.int32)
+    for _ in range(depth):
+        f = feat_idx[t_ix, idx]
+        xv = jnp.take_along_axis(feats, f, axis=1)
+        go_left = xv <= thresh[t_ix, idx]
+        idx = 2 * idx + 1 + (1 - go_left.astype(jnp.int32))
+    return base + leaf[t_ix, idx - n_internal].sum(axis=1)

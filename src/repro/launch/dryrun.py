@@ -1,0 +1,243 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-touching import: jax locks the device count on
+# first backend init. Placeholder host devices exist ONLY for this dry-run.
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import subprocess    # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES, applicable_shapes, get_arch, list_archs  # noqa: E402
+from repro.distributed.sharding import batch_spec, tree_shardings  # noqa: E402
+from repro.launch import roofline as rl  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.specs import decode_inputs_specs, train_batch_specs  # noqa: E402
+from repro.models import build_model, split_tree  # noqa: E402
+from repro.train.optimizer import AdamWConfig  # noqa: E402
+from repro.train.train_step import TrainConfig, make_init_state, make_train_step  # noqa: E402
+
+OUT_DIR_DEFAULT = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                               "experiments", "dryrun")
+
+
+def _prep_cfg(arch: str, parts: bool, shape=None):
+    cfg = get_arch(arch)
+    reps = dict(param_dtype=jnp.bfloat16, compute_dtype=jnp.bfloat16,
+                unroll_inner=parts)  # unrolled inner loops => exact body costs
+    # keep the unrolled SSD chunk count bounded for long prefills
+    if parts and cfg.ssm_state and shape is not None and shape.kind != "decode":
+        reps["ssm_chunk"] = max(cfg.ssm_chunk, shape.seq_len // 16)
+    return dataclasses.replace(cfg, **reps)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, parts: bool = True):
+    t0 = time.time()
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    cfg = _prep_cfg(arch, parts, shape)
+    model = build_model(cfg)
+    big = cfg.n_params() > 30e9
+    result = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "n_chips": n_chips, "mode": shape.kind,
+        "n_params": cfg.n_params(), "n_active_params": cfg.n_active_params(),
+        "moment_dtype": "int8" if big else "float32",
+    }
+
+    key = jax.random.key(0)
+    if shape.kind == "train":
+        # production memory policy: huge archs train with microbatching
+        # (activation footprint / accum) and int8 Adam moments
+        accum = 8 if big else 1
+        tc = TrainConfig(opt=AdamWConfig(moment_dtype="int8" if big else "float32"),
+                         grad_accum=accum)
+        result["grad_accum"] = accum
+        state_abs = jax.eval_shape(make_init_state(model, tc), key)
+        state_sds, state_axes = split_tree(state_abs)
+        state_sh = tree_shardings(mesh, state_sds, state_axes)
+        batch_sds, batch_sh = train_batch_specs(cfg, shape, mesh)
+        step = make_train_step(model, tc)
+        with mesh:
+            lowered = jax.jit(
+                step, in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None), donate_argnums=(0,),
+            ).lower(state_sds, batch_sds)
+        prm_sds, prm_axes = state_sds["params"], state_axes["params"]
+        cache_sds = cache_axes = None
+    else:
+        prm_abs = jax.eval_shape(model.init_params, key)
+        prm_sds, prm_axes = split_tree(prm_abs)
+        prm_sh = tree_shardings(mesh, prm_sds, prm_axes)
+        if shape.kind == "prefill":
+            batch_sds, batch_sh = train_batch_specs(cfg, shape, mesh)
+            with mesh:
+                lowered = jax.jit(
+                    model.prefill, in_shardings=(prm_sh, batch_sh),
+                ).lower(prm_sds, batch_sds)
+            cache_sds = cache_axes = None
+        else:  # decode
+            cache_abs = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            cache_sds, cache_axes = split_tree(cache_abs)
+            cache_sh = tree_shardings(mesh, cache_sds, cache_axes)
+            in_sds, in_sh = decode_inputs_specs(cfg, shape, mesh)
+
+            def serve_step(prm, cache, tokens, pos, enc):
+                return model.decode_step(prm, cache, tokens, pos, enc)
+
+            enc_sds = in_sds.get("enc")
+            enc_sh = in_sh.get("enc")
+            logits_sh = None
+            if os.environ.get("REPRO_SHARD_LOGITS"):
+                # keep logits vocab-sharded (sampler consumes them sharded;
+                # avoids the per-token all-gather of [B, V])
+                from jax.sharding import NamedSharding, PartitionSpec
+
+                logits_sh = NamedSharding(mesh, PartitionSpec(None, None, "model"))
+            with mesh:
+                lowered = jax.jit(
+                    serve_step,
+                    in_shardings=(prm_sh, cache_sh, in_sh["tokens"],
+                                  in_sh["pos"], enc_sh),
+                    out_shardings=(logits_sh, cache_sh),
+                    donate_argnums=(1,),
+                ).lower(prm_sds, cache_sds, in_sds["tokens"], in_sds["pos"],
+                        enc_sds)
+
+    t_lower = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time()
+
+    mem = rl.memory_dict(compiled)
+    cost_full = rl.cost_dict(compiled)
+    coll_full = rl.collective_bytes(compiled.as_text())
+    print("memory_analysis:", json.dumps(mem))          # proves it fits
+    print("cost_analysis:", json.dumps(cost_full))      # FLOPs/bytes §Roofline
+
+    result.update(
+        memory=mem, cost_full=cost_full, collectives_full=coll_full,
+        lower_s=round(t_lower - t0, 2), compile_s=round(t_compile - t_lower, 2),
+    )
+
+    # ---- per-segment body costs (scan trip-count correction) ----
+    flops = cost_full["flops"]
+    byts = cost_full["bytes"]
+    coll = float(coll_full["total"])
+    if parts:
+        part_list = rl.group_parts(model, cfg, shape, mesh, shape.kind,
+                                   prm_sds, prm_axes, cache_sds, cache_axes)
+        part_results = []
+        for name, mult, lower_fn in part_list:
+            pl = lower_fn()
+            pc = pl.compile()
+            c = rl.cost_dict(pc)
+            cb = rl.collective_bytes(pc.as_text())
+            part_results.append({"name": name, "multiplier": mult,
+                                 "cost": c, "collectives": cb["total"]})
+            scale = (3.0 if shape.kind == "train" else 1.0)
+            # train bodies are lowered as grad (fwd+bwd); the full program's
+            # single-counted body is also fwd+bwd, so the correction factor
+            # applies uniformly: add (mult-1) body costs.
+            flops += (mult - 1) * c["flops"]
+            byts += (mult - 1) * c["bytes"]
+            coll += (mult - 1) * cb["total"]
+        result["parts"] = part_results
+
+    mf = rl.model_flops(cfg, shape)
+    result["roofline"] = rl.roofline_terms(flops, byts, coll, n_chips, mf)
+    result["adjusted"] = {"flops": flops, "bytes": byts, "collective_bytes": coll}
+    result["env_overrides"] = {k: v for k, v in os.environ.items()
+                               if k.startswith("REPRO_")}
+    result["total_s"] = round(time.time() - t0, 2)
+    return result
+
+
+def cell_list(multi_pod: bool | None = None):
+    cells = []
+    for arch in list_archs():
+        for shape in applicable_shapes(get_arch(arch)):
+            for mp in ([False, True] if multi_pod is None else [multi_pod]):
+                cells.append((arch, shape, mp))
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=os.path.normpath(OUT_DIR_DEFAULT))
+    ap.add_argument("--no-parts", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for the output file "
+                    "(perf-iteration runs; env overrides recorded)")
+    args = ap.parse_args()
+
+    if args.list:
+        for c in cell_list():
+            print(c)
+        return
+
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        mp = {"single": False, "multi": True, "both": None}[args.mesh]
+        failures = []
+        for arch, shape, multi in cell_list(mp):
+            tag = f"{arch}__{shape}__{'multi' if multi else 'single'}"
+            path = os.path.join(args.out, tag + ".json")
+            if args.skip_existing and os.path.exists(path):
+                print("skip", tag)
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape,
+                   "--mesh", "multi" if multi else "single", "--out", args.out]
+            if args.no_parts:
+                cmd.append("--no-parts")
+            print(">>>", tag, flush=True)
+            try:
+                rc = subprocess.run(
+                    cmd, timeout=2400,
+                    env={**os.environ,
+                         "PYTHONPATH": os.environ.get("PYTHONPATH", "")})
+                code = rc.returncode
+            except subprocess.TimeoutExpired:
+                code = -9
+            if code != 0:
+                failures.append(tag)
+                print("FAILED", tag, flush=True)
+        print("done; failures:", failures)
+        sys.exit(1 if failures else 0)
+
+    multi = args.mesh == "multi"
+    tag = f"{args.arch}__{args.shape}__{'multi' if multi else 'single'}"
+    if args.tag:
+        tag += f"__{args.tag}"
+    try:
+        res = run_cell(args.arch, args.shape, multi, parts=not args.no_parts)
+    except Exception:
+        res = {"arch": args.arch, "shape": args.shape,
+               "mesh": "multi" if multi else "single",
+               "error": traceback.format_exc()}
+        with open(os.path.join(args.out, tag + ".json"), "w") as f:
+            json.dump(res, f, indent=2)
+        print(res["error"])
+        sys.exit(1)
+    with open(os.path.join(args.out, tag + ".json"), "w") as f:
+        json.dump(res, f, indent=2)
+    print(json.dumps({k: v for k, v in res.items() if k != "parts"}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

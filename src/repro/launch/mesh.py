@@ -1,0 +1,44 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run must set XLA_FLAGS
+before the first jax device query.
+
+Topology intent (TPU v5e):
+  single-pod  (data=16, model=16)        = 256 chips
+  multi-pod   (pod=2, data=16, model=16) = 512 chips; "pod" is the DCN axis
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — the "
+            "dry-run entrypoint must set XLA_FLAGS="
+            '"--xla_force_host_platform_device_count=512" before any jax import')
+    try:
+        return jax.make_mesh(shape, axes, devices=devices[:n])
+    except TypeError:  # older make_mesh without devices kwarg
+        from jax.sharding import Mesh
+
+        return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU tests (requires forced host device count)."""
+    import jax
+
+    n = int(np.prod(shape))
+    devices = jax.devices()[:n]
+    from jax.sharding import Mesh
+
+    return Mesh(np.asarray(devices).reshape(shape), axes)

@@ -1,0 +1,82 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+per-cell JSON artifacts in experiments/dryrun/."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+
+def load_cells(out_dir: str, mesh: str):
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, f"*__{mesh}.json"))):
+        r = json.load(open(path))
+        cells.append(r)
+    return cells
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/1e9:.1f}"
+
+
+def roofline_table(cells) -> str:
+    hdr = ("| arch | shape | params | dom | compute s | memory s | coll s | "
+           "MODEL/HLO | roofline frac | mem GB/dev | note |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in cells:
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | - | ERROR | | | | | | | "
+                        f"{r['error'].splitlines()[-1][:60]} |")
+            continue
+        rf = r["roofline"]
+        note = "int8-adam" if r.get("moment_dtype") == "int8" else ""
+        if r.get("grad_accum", 1) > 1:
+            note += f" ga={r['grad_accum']}"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['n_params']/1e9:.1f}B "
+            f"| {rf['dominant']} | {rf['compute_s']:.3f} | {rf['memory_s']:.3f} "
+            f"| {rf['collective_s']:.3f} | {rf['useful_flops_ratio']:.2f} "
+            f"| {rf['roofline_fraction']*100:.2f}% "
+            f"| {fmt_bytes(r['memory'].get('per_device_bytes_est'))} | {note} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def dryrun_table(cells) -> str:
+    hdr = ("| arch | shape | compile s | HLO GFLOP/dev | coll GB/dev "
+           "(AR/AG/RS/A2A/CP) | args GB/dev | temp GB/dev |\n"
+           "|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in cells:
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | |")
+            continue
+        c = r["collectives_full"]
+        coll = "/".join(f"{c.get(k,0)/1e9:.1f}" for k in
+                        ("all-reduce", "all-gather", "reduce-scatter",
+                         "all-to-all", "collective-permute"))
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('compile_s','-')} "
+            f"| {r['cost_full']['flops']/1e9:.0f} | {coll} "
+            f"| {fmt_bytes(r['memory'].get('argument_size_in_bytes'))} "
+            f"| {fmt_bytes(r['memory'].get('temp_size_in_bytes'))} |")
+    return hdr + "\n".join(rows) + "\n"
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    for mesh in ("single", "multi"):
+        cells = load_cells(out_dir, mesh)
+        if not cells:
+            continue
+        print(f"\n### {mesh} mesh — roofline ({len(cells)} cells)\n")
+        print(roofline_table(cells))
+        print(f"\n### {mesh} mesh — dry-run detail\n")
+        print(dryrun_table(cells))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,306 @@
+"""Roofline derivation from compiled dry-run artifacts (TPU v5e targets).
+
+Three terms per (arch × shape × mesh), in seconds:
+
+  compute  = HLO_FLOPs_per_device / peak_FLOPs_chip
+  memory   = HLO_bytes_per_device / HBM_bw_chip
+  coll     = collective_bytes_per_device / ICI_link_bw
+
+Methodology note (recorded in EXPERIMENTS.md): XLA's cost analysis counts a
+while-loop (scan) body ONCE regardless of trip count. The model stacks are
+scan-over-groups, so the full program undercounts by ~n_groups. We therefore
+lower each segment's *group body* separately under the same mesh/shardings
+and combine:  total = cost(full) + Σ_seg (G_seg - 1) × cost(body_seg).
+Inner chunk loops (flash KV, SSD, CE) are python-unrolled in dry-run configs
+(`unroll_inner=True`) so body costs are exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.distributed.sharding import batch_spec, tree_shardings
+from repro.models.common import split_tree
+
+# ---- TPU v5e hardware constants (per chip) ----
+PEAK_FLOPS = 197e12      # bf16
+HBM_BW = 819e9           # B/s
+ICI_BW = 50e9            # B/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?P<result>.+?)\s+"
+    r"(?P<kind>all-reduce|all-gather|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_SHAPE_RE = re.compile(r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_BRACE_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_BRACE_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+def collective_bytes(hlo_text: str, default_group: int = 16) -> dict:
+    """Per-device wire bytes of collectives from (SPMD) HLO text.
+
+    Operands are printed as bare value names in compiled.as_text(), so
+    volumes come from the RESULT shapes plus per-op group size g:
+      all-reduce          2·B·(g-1)/g     (ring reduce-scatter + all-gather)
+      all-gather          B·(g-1)/g       (B = gathered result)
+      reduce-scatter      B·(g-1)         (B = scattered shard result)
+      all-to-all          B·(g-1)/g
+      collective-permute  B
+    """
+    out = {k: 0.0 for k in ("all-reduce", "all-gather", "reduce-scatter",
+                            "all-to-all", "collective-permute")}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group("kind")
+        if m.group("start") and kind in out:
+            pass  # -start carries the shapes; -done lines don't match '=... op('
+        b = sum(_shape_bytes(d, s)
+                for d, s in _SHAPE_RE.findall(m.group("result")))
+        # -start results are tuples (operand, result): halve to avoid double count
+        if m.group("start"):
+            b = b / 2
+        g = _group_size(line, default_group)
+        if kind == "all-reduce":
+            wire = 2.0 * b * (g - 1) / g
+        elif kind == "all-gather":
+            wire = b * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = b * (g - 1)
+        elif kind == "all-to-all":
+            wire = b * (g - 1) / g
+        else:  # collective-permute
+            wire = b
+        out[kind] += wire
+    out["total"] = sum(out.values())
+    return {k: int(v) for k, v in out.items()}
+
+
+def cost_dict(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        return {"flops": float(ca.get("flops", 0.0)),
+                "bytes": float(ca.get("bytes accessed", 0.0))}
+    except Exception as e:  # pragma: no cover
+        return {"flops": 0.0, "bytes": 0.0, "error": str(e)}
+
+
+def memory_dict(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+        keys = ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes",
+                "generated_code_size_in_bytes")
+        out = {}
+        for k in keys:
+            v = getattr(ma, k, None)
+            if v is not None:
+                out[k] = int(v)
+        per_dev = (out.get("argument_size_in_bytes", 0)
+                   + out.get("output_size_in_bytes", 0)
+                   + out.get("temp_size_in_bytes", 0)
+                   - out.get("alias_size_in_bytes", 0))
+        out["per_device_bytes_est"] = int(per_dev)
+        return out
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+
+
+def roofline_terms(flops: float, byts: float, coll: float, n_chips: int,
+                   model_flops_total: float) -> dict:
+    """All inputs per-device; model_flops_total is whole-job analytic."""
+    compute_s = flops / PEAK_FLOPS
+    memory_s = byts / HBM_BW
+    coll_s = coll / ICI_BW
+    dom = max(("compute", compute_s), ("memory", memory_s),
+              ("collective", coll_s), key=lambda kv: kv[1])
+    hlo_total = flops * n_chips
+    return {
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": coll_s,
+        "dominant": dom[0],
+        "bound_s": dom[1],
+        "model_flops": model_flops_total,
+        "hlo_flops_total": hlo_total,
+        "useful_flops_ratio": (model_flops_total / hlo_total) if hlo_total else 0.0,
+        "roofline_fraction": (
+            (model_flops_total / n_chips / PEAK_FLOPS) / dom[1] if dom[1] else 0.0),
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """Analytic MODEL_FLOPS: 6·N·D train / 2·N·D forward (active params)."""
+    n_act = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence — params read once, plus KV attention
+    return 2.0 * n_act * shape.global_batch
+
+
+# ------------------------------------------------------------ body parts ----
+def _strip_layer(sds, axes):
+    v = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape[1:], s.dtype), sds)
+    a = jax.tree.map(lambda t: tuple(t[1:]), axes,
+                     is_leaf=lambda x: isinstance(x, tuple) and (
+                         len(x) == 0 or isinstance(x[0], (str, type(None)))))
+    return v, a
+
+
+def group_parts(model, cfg, shape, mesh, mode, prm_sds, prm_axes, cache_sds=None,
+                cache_axes=None):
+    """Yield (name, multiplier, lower_fn) per scanned segment (+ prefix/encoder).
+
+    lower_fn() -> jax.stages.Lowered for the segment body under `mesh`.
+    """
+    from repro.models.transformer import BlockApplier, Ctx
+
+    gb = shape.global_batch
+    s = shape.seq_len
+    d = cfg.d_model
+    cd = cfg.compute_dtype
+    bspec = batch_spec(mesh, gb)
+    x_sh = NamedSharding(mesh, PartitionSpec(*(tuple(bspec) + (None, None))))
+    enc_needed = cfg.family in ("encdec", "vlm")
+    enc_len = cfg.vision_seq if cfg.family == "vlm" else cfg.encoder_seq
+
+    shared_sds = prm_sds.get("shared")
+    shared_axes = prm_axes.get("shared") if shared_sds is not None else None
+    shared_sh = (tree_shardings(mesh, shared_sds, shared_axes)
+                 if shared_sds is not None else None)
+
+    parts = []
+
+    def make_part(name, mult, period, bp_sds, bp_axes, cache_slice=None,
+                  cache_slice_axes=None):
+        bp_sh = tree_shardings(mesh, bp_sds, bp_axes)
+        sq = 1 if mode == "decode" else s
+
+        def fn(bp, shared, x, enc, cache, pos):
+            applier = BlockApplier(cfg, shared=shared)
+            if mode == "decode":
+                ctx = Ctx(mode="decode", pos=pos, enc=enc)
+            else:
+                positions = jnp.broadcast_to(jnp.arange(sq)[None], (gb, sq))
+                ctx = Ctx(mode="prefill" if mode == "prefill" else "train",
+                          positions=positions, enc=enc, max_seq=sq)
+            caches_out = []
+            for pi, bt in enumerate(period):
+                cc = cache[f"pos{pi}"] if cache is not None else None
+                x, nc, _ = applier(bt, bp[f"pos{pi}"], x, ctx, cc)
+                caches_out.append(nc)
+            return x, caches_out
+
+        x_sds = jax.ShapeDtypeStruct((gb, sq, d), cd)
+        enc_sds = (jax.ShapeDtypeStruct((gb, enc_len, d), cd)
+                   if enc_needed else None)
+        enc_sh = (NamedSharding(mesh, PartitionSpec(*(tuple(bspec) + (None, None))))
+                  if enc_needed else None)
+        pos_sds = jax.ShapeDtypeStruct((gb,), jnp.int32) if mode == "decode" else None
+        pos_sh = NamedSharding(mesh, bspec) if mode == "decode" else None
+        cache_sh = (tree_shardings(mesh, cache_slice, cache_slice_axes)
+                    if cache_slice is not None else None)
+
+        if mode == "train":
+            def loss_fn(bp, shared, x, enc, cache, pos):
+                y, _ = fn(bp, shared, x, enc, cache, pos)
+                return jnp.sum(y.astype(jnp.float32))
+
+            target = jax.grad(loss_fn, argnums=(0, 2))
+            out_sh = None
+        else:
+            target = fn
+            out_sh = None
+
+        def lower():
+            with mesh:
+                return jax.jit(
+                    target,
+                    in_shardings=(bp_sh, shared_sh, x_sh, enc_sh, cache_sh, pos_sh),
+                ).lower(bp_sds, shared_sds, x_sds, enc_sds, cache_slice, pos_sds)
+
+        parts.append((name, mult, lower))
+
+    for si, seg in enumerate(model.segments):
+        bp_sds, bp_axes = _strip_layer(prm_sds[f"seg{si}"], prm_axes[f"seg{si}"])
+        csl = casl = None
+        if mode == "decode" and cache_sds is not None:
+            csl, casl = _strip_layer(cache_sds[f"seg{si}"], cache_axes[f"seg{si}"])
+            csl = {f"pos{pi}": csl[f"pos{pi}"] for pi in range(len(seg.period))}
+        make_part(f"seg{si}", seg.n_groups, seg.period, bp_sds, bp_axes, csl, casl)
+
+    if model.prefix:
+        bt = model.prefix[0]
+        bp_sds = {"pos0": prm_sds["prefix0"]}
+        bp_axes = {"pos0": prm_axes["prefix0"]}
+        csl = casl = None
+        if mode == "decode" and cache_sds is not None:
+            csl = {"pos0": cache_sds["prefix0"]}
+            casl = {"pos0": cache_axes["prefix0"]}
+        make_part("prefix", len(model.prefix), (bt,), bp_sds, bp_axes, csl, casl)
+
+    if cfg.family == "encdec" and mode != "decode":
+        # encoder body over stub frames
+        enc_bt = model.enc_bt
+        bp_sds, bp_axes = _strip_layer(prm_sds["enc_blocks"], prm_axes["enc_blocks"])
+        bp_sh = tree_shardings(mesh, bp_sds, bp_axes)
+
+        def enc_fn(bp, x):
+            from repro.models.transformer import BlockApplier, Ctx
+
+            positions = jnp.broadcast_to(jnp.arange(enc_len)[None], (gb, enc_len))
+            ctx = Ctx(mode="train", positions=positions)
+            applier = BlockApplier(cfg)
+            y, _, _ = applier(enc_bt, bp, x, ctx)
+            return y
+
+        x_sds = jax.ShapeDtypeStruct((gb, enc_len, d), cd)
+        if mode == "train":
+            tgt = jax.grad(lambda bp, x: jnp.sum(enc_fn(bp, x).astype(jnp.float32)),
+                           argnums=(0, 1))
+        else:
+            tgt = enc_fn
+
+        def lower_enc(tgt=tgt, bp_sh=bp_sh, bp_sds=bp_sds, x_sds=x_sds):
+            with mesh:
+                return jax.jit(tgt, in_shardings=(bp_sh, x_sh)).lower(bp_sds, x_sds)
+
+        parts.append(("encoder", cfg.n_encoder_layers, lower_enc))
+
+    return parts

@@ -1,0 +1,45 @@
+"""input_specs: ShapeDtypeStruct stand-ins + shardings for every model input.
+
+No device allocation ever happens here — weak-type-correct abstract arrays
+only. Modality frontends are stubs per the assignment: [audio]/[vlm] archs
+receive precomputed frame/patch embeddings under batch["enc"].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig
+from repro.distributed.sharding import DEFAULT_RULES, batch_spec, spec_for
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    gb, s = shape.global_batch, shape.seq_len
+    bspec = batch_spec(mesh, gb)
+    sds = {"tokens": jax.ShapeDtypeStruct((gb, s), jnp.int32)}
+    sh = {"tokens": NamedSharding(mesh, bspec)}
+    if cfg.family in ("encdec", "vlm"):
+        se = cfg.encoder_seq if cfg.family == "encdec" else cfg.vision_seq
+        sds["enc"] = jax.ShapeDtypeStruct((gb, se, cfg.d_model), cfg.compute_dtype)
+        sh["enc"] = NamedSharding(mesh, PartitionSpec(*(list(bspec) + [None, None])))
+    return sds, sh
+
+
+def decode_inputs_specs(cfg: ArchConfig, shape: ShapeConfig, mesh):
+    """(tokens [B,1], pos [B], enc?) for a single decode step."""
+    gb = shape.global_batch
+    bspec = batch_spec(mesh, gb)
+    sds = {
+        "tokens": jax.ShapeDtypeStruct((gb, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((gb,), jnp.int32),
+    }
+    sh = {
+        "tokens": NamedSharding(mesh, bspec),
+        "pos": NamedSharding(mesh, bspec),
+    }
+    if cfg.family in ("encdec", "vlm"):
+        se = cfg.encoder_seq if cfg.family == "encdec" else cfg.vision_seq
+        sds["enc"] = jax.ShapeDtypeStruct((gb, se, cfg.d_model), cfg.compute_dtype)
+        sh["enc"] = NamedSharding(mesh, PartitionSpec(*(list(bspec) + [None, None])))
+    return sds, sh

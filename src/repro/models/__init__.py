@@ -1,0 +1,7 @@
+from repro.models.common import P, split_tree
+from repro.models.transformer import DecoderLM, BlockType, Segment, Ctx
+from repro.models.encdec import EncDecLM
+from repro.models.zoo import build_model
+
+__all__ = ["P", "split_tree", "DecoderLM", "EncDecLM", "BlockType", "Segment",
+           "Ctx", "build_model"]

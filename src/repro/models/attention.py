@@ -1,0 +1,266 @@
+"""Attention: GQA flash (chunked online-softmax), SWA/local-global, cross,
+MLA (DeepSeek multi-head latent attention), plus decode paths with KV caches.
+
+All shapes static; flash attention scans KV in chunks so prefill_32k never
+materializes an S×S score matrix. Decode attends over the full (or rolling,
+for SWA) cache with a single masked matmul.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P, apply_rope, dense_init, rms_norm
+
+NEG_INF = jnp.float32(-1e30)
+
+
+# ------------------------------------------------------------------ flash ----
+def flash_attention(
+    q: jax.Array,   # [B, Sq, H, dh]
+    k: jax.Array,   # [B, Skv, KV, dh]
+    v: jax.Array,   # [B, Skv, KV, dhv]
+    *,
+    causal: bool,
+    window: int = 0,          # >0: sliding-window (local) attention
+    q_offset: int = 0,        # absolute position of q[0] (prefill resume)
+    kv_chunk: int = 1024,
+    causal_skip: bool = False,  # skip fully-masked KV chunks (beyond-paper opt)
+    unroll: bool = False,
+) -> jax.Array:
+    import os
+    b, sq, h, dh = q.shape
+    skv, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    dhv = v.shape[-1]
+    kv_chunk = int(os.environ.get("REPRO_KV_CHUNK", kv_chunk))
+    c = min(kv_chunk, skv)
+    nc = -(-skv // c)
+    pad = nc * c - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    scale = dh ** -0.5
+    qq = (q * scale).reshape(b, sq, kv, g, dh)
+    q_pos = q_offset + jnp.arange(sq)
+
+    kc = k.reshape(b, nc, c, kv, dh).transpose(1, 0, 2, 3, 4)    # [nc,B,C,KV,dh]
+    vc = v.reshape(b, nc, c, kv, dhv).transpose(1, 0, 2, 3, 4)
+
+    def chunk_scores(kj, j):
+        s = jnp.einsum("bqkgd,bckd->bqkgc", qq, kj,
+                       preferred_element_type=jnp.float32)
+        k_pos = j * c + jnp.arange(c)
+        m = k_pos[None, :] < skv                                  # kv padding
+        if causal:
+            m = m & (k_pos[None, :] <= q_pos[:, None])
+        if window > 0:
+            m = m & (k_pos[None, :] > q_pos[:, None] - window)
+        return jnp.where(m[None, :, None, None, :], s, NEG_INF)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        kj, vj, j = xs
+        s = chunk_scores(kj, j)                                   # [B,Sq,KV,G,C]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bqkgc,bckd->bqkgd", p.astype(vj.dtype), vj,
+            preferred_element_type=jnp.float32,
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((b, sq, kv, g), NEG_INF)
+    l0 = jnp.zeros((b, sq, kv, g), jnp.float32)
+    a0 = jnp.zeros((b, sq, kv, g, dhv), jnp.float32)
+    from repro.models.common import maybe_scan
+
+    (m, l, acc), _ = maybe_scan(body, (m0, l0, a0), (kc, vc, jnp.arange(nc)),
+                                unroll)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, sq, h, dhv).astype(q.dtype)
+
+
+def decode_attention(
+    q: jax.Array,        # [B, 1, H, dh]
+    k_cache: jax.Array,  # [B, S, KV, dh]
+    v_cache: jax.Array,  # [B, S, KV, dhv]
+    valid_len: jax.Array,  # [B] number of valid cache slots
+) -> jax.Array:
+    b, _, h, dh = q.shape
+    s, kv = k_cache.shape[1], k_cache.shape[2]
+    g = h // kv
+    qq = (q * dh**-0.5).reshape(b, kv, g, dh)
+    sc = jnp.einsum("bkgd,bskd->bkgs", qq, k_cache,
+                    preferred_element_type=jnp.float32)
+    mask = jnp.arange(s)[None, :] < valid_len[:, None]            # [B, S]
+    sc = jnp.where(mask[:, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, -1).astype(q.dtype)
+
+
+# ----------------------------------------------------------- standard GQA ----
+def init_attention(key, cfg, name="attn"):
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * hd), d, cfg.param_dtype, ("embed", "heads")),
+        "wk": dense_init(ks[1], (d, kv * hd), d, cfg.param_dtype, ("embed", "kv_heads")),
+        "wv": dense_init(ks[2], (d, kv * hd), d, cfg.param_dtype, ("embed", "kv_heads")),
+        "wo": dense_init(ks[3], (h * hd, d), h * hd, cfg.param_dtype, ("heads", "embed")),
+    }
+
+
+def attention_forward(
+    cfg, p, x, *, positions, causal=True, window=0,
+    kv_override=None,  # (k, v) for cross attention (already projected? no: raw enc output)
+    causal_skip=False,
+):
+    """Full-sequence attention (train / prefill). Returns (out, (k, v))."""
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cd = cfg.compute_dtype
+    q = (x @ p["wq"].astype(cd)).reshape(b, s, h, hd)
+    if kv_override is None:
+        kk = (x @ p["wk"].astype(cd)).reshape(b, s, kv, hd)
+        vv = (x @ p["wv"].astype(cd)).reshape(b, s, kv, hd)
+        q = apply_rope(q, positions, cfg.rope_theta)
+        kk = apply_rope(kk, positions, cfg.rope_theta)
+    else:
+        enc = kv_override
+        se = enc.shape[1]
+        kk = (enc @ p["wk"].astype(cd)).reshape(b, se, kv, hd)
+        vv = (enc @ p["wv"].astype(cd)).reshape(b, se, kv, hd)
+        causal = False
+        window = 0
+    out = flash_attention(q, kk, vv, causal=causal, window=window,
+                          causal_skip=causal_skip, unroll=cfg.unroll_inner)
+    return out.reshape(b, s, h * hd) @ p["wo"].astype(cd), (kk, vv)
+
+
+def attention_decode(
+    cfg, p, x, cache, *, pos,  # x [B,1,d]; cache dict k/v [B,S,KV,hd]; pos [B]
+    window=0,
+    cross_kv=None,  # precomputed (k, v) for cross attention (static cache)
+):
+    b = x.shape[0]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    cd = cfg.compute_dtype
+    q = (x @ p["wq"].astype(cd)).reshape(b, 1, h, hd)
+    if cross_kv is not None:
+        kk, vv = cross_kv
+        valid = jnp.full((b,), kk.shape[1], jnp.int32)
+        return decode_attention(q, kk, vv, valid).reshape(b, 1, h * hd) @ p["wo"].astype(cd), cache
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    knew = (x @ p["wk"].astype(cd)).reshape(b, 1, kv, hd)
+    vnew = (x @ p["wv"].astype(cd)).reshape(b, 1, kv, hd)
+    knew = apply_rope(knew, pos[:, None], cfg.rope_theta)
+    s_max = cache["k"].shape[1]
+    slot = (pos % s_max) if window > 0 else pos                   # rolling for SWA
+    kc = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0, 0)))(
+        cache["k"], knew, slot
+    )
+    vc = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n, (i, 0, 0)))(
+        cache["v"], vnew, slot
+    )
+    valid = jnp.minimum(pos + 1, s_max)
+    out = decode_attention(q, kc, vc, valid)
+    return out.reshape(b, 1, h * hd) @ p["wo"].astype(cd), {"k": kc, "v": vc}
+
+
+# -------------------------------------------------------------------- MLA ----
+def init_mla(key, cfg, name="mla"):
+    d = cfg.d_model
+    h = cfg.n_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    prm = {
+        "wq_a": dense_init(ks[0], (d, cfg.q_lora_rank), d, cfg.param_dtype, ("embed", None)),
+        "q_norm": P(jnp.zeros((cfg.q_lora_rank,), cfg.param_dtype), (None,)),
+        "wq_b": dense_init(ks[1], (cfg.q_lora_rank, h * qk), cfg.q_lora_rank,
+                           cfg.param_dtype, (None, "heads")),
+        "wkv_a": dense_init(ks[2], (d, cfg.kv_lora_rank + cfg.qk_rope_dim), d,
+                            cfg.param_dtype, ("embed", None)),
+        "kv_norm": P(jnp.zeros((cfg.kv_lora_rank,), cfg.param_dtype), (None,)),
+        "wkv_b": dense_init(
+            ks[3], (cfg.kv_lora_rank, h * (cfg.qk_nope_dim + cfg.v_head_dim)),
+            cfg.kv_lora_rank, cfg.param_dtype, (None, "heads")),
+        "wo": dense_init(ks[4], (h * cfg.v_head_dim, d), h * cfg.v_head_dim,
+                         cfg.param_dtype, ("heads", "embed")),
+    }
+    return prm
+
+
+def mla_forward(cfg, p, x, *, positions, causal_skip=False):
+    """Train/prefill MLA: materialize per-head K/V from the latent."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    cd = cfg.compute_dtype
+
+    q = rms_norm(x @ p["wq_a"].astype(cd), p["q_norm"]) @ p["wq_b"].astype(cd)
+    q = q.reshape(b, s, h, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv_a = x @ p["wkv_a"].astype(cd)                              # [B,S,lora+rd]
+    c_kv = rms_norm(kv_a[..., : cfg.kv_lora_rank], p["kv_norm"])
+    k_rope = apply_rope(kv_a[..., cfg.kv_lora_rank :][:, :, None, :], positions,
+                        cfg.rope_theta)                           # [B,S,1,rd]
+    kv = (c_kv @ p["wkv_b"].astype(cd)).reshape(b, s, h, nd + vd)
+    k_nope, v = kv[..., :nd], kv[..., nd:]
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (b, s, h, rd))], axis=-1)
+    qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = flash_attention(qf, k, v, causal=True, causal_skip=causal_skip,
+                          unroll=cfg.unroll_inner)
+    return out.reshape(b, s, h * vd) @ p["wo"].astype(cd), (c_kv, k_rope[:, :, 0, :])
+
+
+def mla_decode(cfg, p, x, cache, *, pos):
+    """Absorbed MLA decode: score against the compressed latent cache.
+
+    cache: {"c_kv": [B,S,lora], "k_rope": [B,S,rd]} — 576 B/token for
+    deepseek-v3 instead of 2*H*dh, the MLA memory win.
+    """
+    b = x.shape[0]
+    h = cfg.n_heads
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    lr = cfg.kv_lora_rank
+    cd = cfg.compute_dtype
+
+    q = rms_norm(x @ p["wq_a"].astype(cd), p["q_norm"]) @ p["wq_b"].astype(cd)
+    q = q.reshape(b, h, nd + rd)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope[:, None], pos[:, None], cfg.rope_theta)[:, 0]
+
+    kv_a = x[:, 0, :] @ p["wkv_a"].astype(cd)
+    c_new = rms_norm(kv_a[..., :lr], p["kv_norm"])
+    kr_new = apply_rope(kv_a[:, None, None, lr:], pos[:, None], cfg.rope_theta)[:, 0, 0]
+
+    ckv = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n[None], (i, 0)))(
+        cache["c_kv"], c_new, pos
+    )
+    krc = jax.vmap(lambda c, n, i: jax.lax.dynamic_update_slice(c, n[None], (i, 0)))(
+        cache["k_rope"], kr_new, pos
+    )
+
+    # absorb W_uk into q: q_lat [B,H,lora]
+    wkv_b = p["wkv_b"].astype(cd).reshape(lr, h, nd + vd)
+    w_uk = wkv_b[..., :nd]                                        # [lora, H, nd]
+    w_uv = wkv_b[..., nd:]                                        # [lora, H, vd]
+    q_lat = jnp.einsum("bhn,lhn->bhl", q_nope, w_uk)
+    scale = (nd + rd) ** -0.5
+    s_lat = jnp.einsum("bhl,bsl->bhs", q_lat, ckv)
+    s_rope = jnp.einsum("bhr,bsr->bhs", q_rope, krc)
+    sc = (s_lat + s_rope) * scale
+    mask = jnp.arange(ckv.shape[1])[None, :] <= pos[:, None]
+    sc = jnp.where(mask[:, None, :], sc.astype(jnp.float32), NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1).astype(cd)
+    o_lat = jnp.einsum("bhs,bsl->bhl", pr, ckv)
+    out = jnp.einsum("bhl,lhv->bhv", o_lat, w_uv).reshape(b, 1, h * vd)
+    return out @ p["wo"].astype(cd), {"c_kv": ckv, "k_rope": krc}

@@ -1,0 +1,154 @@
+"""Shared model substrate: params-with-logical-axes, norms, RoPE, init.
+
+Param convention: module init functions return nested dicts whose leaves are
+`P(value, axes)` — the array plus a tuple of *logical* axis names
+("embed", "vocab", "heads", "kv_heads", "mlp", "expert", "layers", ...).
+`split_tree` separates values from axes; the distributed layer maps logical
+axes to mesh axes with divisibility-aware rules (repro.distributed.sharding).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class P:
+    """A param leaf: array value + static logical-axis names.
+
+    Registered as a pytree node whose *only child* is the value and whose
+    axes ride along as static aux data — so `jax.eval_shape` can trace init
+    functions (the dry-run's no-allocation path) and transformations map
+    over values while preserving axes.
+    """
+
+    __slots__ = ("value", "axes")
+
+    def __init__(self, value, axes):
+        self.value = value
+        self.axes = tuple(axes)
+
+    def __repr__(self):
+        return f"P({self.value!r}, axes={self.axes})"
+
+
+jax.tree_util.register_pytree_node(
+    P,
+    lambda p: ((p.value,), p.axes),
+    lambda axes, children: P(children[0], axes),
+)
+
+
+def split_tree(tree):
+    """Nested dict of P -> (values tree, axes tree)."""
+    vals = jax.tree.map(lambda p: p.value, tree, is_leaf=lambda x: isinstance(x, P))
+    axes = jax.tree.map(lambda p: p.axes, tree, is_leaf=lambda x: isinstance(x, P))
+    return vals, axes
+
+
+def dense_init(key, shape, in_axis_size, dtype, axes) -> P:
+    scale = 1.0 / np.sqrt(max(in_axis_size, 1))
+    v = jax.random.normal(key, shape, dtype=jnp.float32) * scale
+    return P(v.astype(dtype), axes)
+
+
+def zeros_init(shape, dtype, axes) -> P:
+    return P(jnp.zeros(shape, dtype=dtype), axes)
+
+
+def ones_init(shape, dtype, axes) -> P:
+    return P(jnp.ones(shape, dtype=dtype), axes)
+
+
+# ---------------------------------------------------------------- norms ----
+def rms_norm(x, scale, eps=1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, scale, bias, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def nonparam_layer_norm(x, eps=1e-5):
+    """OLMo-style non-parametric LayerNorm (no scale/bias)."""
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+def init_norm(key, cfg, d, name="norm"):
+    if cfg.norm_type == "layernorm":
+        return {
+            "scale": ones_init((d,), cfg.param_dtype, ("embed",)),
+            "bias": zeros_init((d,), cfg.param_dtype, ("embed",)),
+        }
+    if cfg.norm_type == "nonparam_ln":
+        return {}
+    return {"scale": zeros_init((d,), cfg.param_dtype, ("embed",))}
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm_type == "layernorm":
+        return layer_norm(x, p["scale"], p["bias"])
+    if cfg.norm_type == "nonparam_ln":
+        return nonparam_layer_norm(x)
+    return rms_norm(x, p["scale"])
+
+
+# ----------------------------------------------------------------- rope ----
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x, positions, theta: float):
+    """x [..., S, H, dh] (dh even), positions [..., S] int32."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # [dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, dh/2]
+    cos = jnp.cos(ang)[..., None, :]                    # [..., S, 1, dh/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x)
+
+
+def maybe_scan(body, init, xs, unroll: bool):
+    """lax.scan, or a python-unrolled equivalent.
+
+    XLA cost analysis counts a while-loop body ONCE regardless of trip
+    count; the dry-run roofline therefore lowers inner loops (flash KV
+    chunks, SSD chunks, CE chunks) unrolled so FLOPs/bytes are exact.
+    Training/serving keep the scan (compile-time friendly).
+    """
+    if not unroll:
+        return jax.lax.scan(body, init, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    carry = init
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *e: jnp.stack(e), *ys)
+    else:
+        ys = None
+    return carry, ys

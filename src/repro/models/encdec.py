@@ -1,0 +1,70 @@
+"""Encoder-decoder LM (whisper-small backbone).
+
+The audio frontend (mel + conv downsampling) is a STUB per the assignment:
+`batch["enc"]` carries precomputed frame embeddings [B, encoder_seq, d].
+The encoder is a scanned stack of bidirectional attention blocks; the
+decoder is a DecoderLM whose every block carries cross-attention to the
+encoder output. Decode caches both self-attn KV and the static cross KV.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.common import apply_norm, dense_init, init_norm
+from repro.models.transformer import (
+    BlockApplier,
+    BlockType,
+    Ctx,
+    DecoderLM,
+    Segment,
+    _init_block,
+    _stack_inits,
+)
+
+
+class EncDecLM(DecoderLM):
+    def __init__(self, cfg: ArchConfig):
+        super().__init__(cfg)
+        # decoder plan: every layer = causal self-attn + cross-attn + mlp
+        per = (BlockType("gqa", cross=True),)
+        self.segments = [Segment(per, cfg.n_layers)]
+        self.prefix = []
+        self.enc_bt = BlockType("gqa", bidir=True)
+
+    def init_params(self, key):
+        k1, k2, k3 = jax.random.split(key, 3)
+        prm = super().init_params(k1)
+        cfg = self.cfg
+        prm["enc_blocks"] = _stack_inits(
+            [_init_block(k, cfg, self.enc_bt)
+             for k in jax.random.split(k2, cfg.n_encoder_layers)])
+        prm["enc_norm"] = init_norm(k3, cfg, cfg.d_model)
+        return prm
+
+    def encode(self, prm, frames):
+        """frames [B, Se, d] (stub frontend output) -> encoder states."""
+        cfg = self.cfg
+        b, se, _ = frames.shape
+        positions = jnp.broadcast_to(jnp.arange(se)[None], (b, se))
+        ctx = Ctx(mode="train", positions=positions)
+        applier = BlockApplier(cfg)
+
+        def body(x, bp):
+            x, _, _ = applier(self.enc_bt, bp, x, ctx)
+            return x, None
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        x, _ = jax.lax.scan(body, frames.astype(cfg.compute_dtype),
+                            prm["enc_blocks"])
+        return apply_norm(cfg, prm["enc_norm"], x)
+
+    def loss(self, prm, batch):
+        enc = self.encode(prm, batch["enc"])
+        return super().loss(prm, {**batch, "enc": enc})
+
+    def prefill(self, prm, batch):
+        enc = self.encode(prm, batch["enc"])
+        return super().prefill(prm, {**batch, "enc": enc})

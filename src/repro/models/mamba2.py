@@ -1,0 +1,192 @@
+"""Mamba2 SSD (state-space duality) mixer — chunked matmul formulation.
+
+Train/prefill: `lax.scan` over sequence chunks; each chunk does the
+quadratic intra-chunk term (attention-like, MXU-friendly [B,H,Q,Q]
+matmuls) plus the inter-chunk state recurrence — the SSD algorithm of
+Mamba2 adapted so no [B,nc,H,Q,Q] tensor is ever materialized (VMEM/HBM
+bounded by one chunk).
+
+Decode: O(1) recurrent state update h[t] = e^{aΔ} h[t-1] + Δ·(B ⊗ x),
+y = C·h + D·x — the reason mamba archs run the long_500k cell.
+
+Single B/C group (n_groups=1, the 2.7b default): B,C ∈ [B,S,N].
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P, dense_init, rms_norm, silu
+
+
+def init_mamba2(key, cfg):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    h = di // hd
+    k = cfg.ssm_conv
+    ks = jax.random.split(key, 8)
+    return {
+        "wz": dense_init(ks[0], (d, di), d, cfg.param_dtype, ("embed", "mlp")),
+        "wx": dense_init(ks[1], (d, di), d, cfg.param_dtype, ("embed", "mlp")),
+        "wB": dense_init(ks[2], (d, n), d, cfg.param_dtype, ("embed", None)),
+        "wC": dense_init(ks[3], (d, n), d, cfg.param_dtype, ("embed", None)),
+        "wdt": dense_init(ks[4], (d, h), d, cfg.param_dtype, ("embed", None)),
+        "conv_x": P(jnp.zeros((k, di), cfg.param_dtype), (None, "mlp")),
+        "conv_B": P(jnp.zeros((k, n), cfg.param_dtype), (None, None)),
+        "conv_C": P(jnp.zeros((k, n), cfg.param_dtype), (None, None)),
+        "a_log": P(jnp.zeros((h,), cfg.param_dtype), (None,)),
+        "d_skip": P(jnp.ones((h,), cfg.param_dtype), (None,)),
+        "dt_bias": P(jnp.zeros((h,), cfg.param_dtype), (None,)),
+        "norm": P(jnp.zeros((di,), cfg.param_dtype), ("mlp",)),
+        "wo": dense_init(ks[5], (di, d), di, cfg.param_dtype, ("mlp", "embed")),
+    }
+
+
+def _causal_conv(x, w):
+    """Depthwise causal conv via k shifted adds. x [B,S,C], w [k,C]."""
+    k = w.shape[0]
+    s = x.shape[1]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    acc = jnp.zeros_like(x)
+    for i in range(k):
+        acc = acc + xp[:, i : i + s, :] * w[i]
+    return acc
+
+
+def _ssd_chunked(xdt, a, bb, cc, chunk, unroll=False):
+    """SSD over chunks.
+
+    xdt [B,S,H,P]  inputs pre-scaled by dt
+    a   [B,S,H]    per-step log decay (dt * A, negative)
+    bb  [B,S,N]    input projection (shared across heads)
+    cc  [B,S,N]    output projection
+    returns y [B,S,H,P], final state [B,H,P,N]
+    """
+    b, s, h, p = xdt.shape
+    n = bb.shape[-1]
+    q = min(chunk, s)
+    nc = s // q
+    assert nc * q == s, "seq must be divisible by ssm_chunk"
+
+    xdt_c = xdt.reshape(b, nc, q, h, p).transpose(1, 0, 2, 3, 4)
+    a_c = a.reshape(b, nc, q, h).transpose(1, 0, 2, 3)
+    b_c = bb.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+    c_c = cc.reshape(b, nc, q, n).transpose(1, 0, 2, 3)
+
+    tri = jnp.tril(jnp.ones((q, q), bool))
+
+    def body(hstate, xs):
+        xq, aq, bq, cq = xs                       # [B,Q,H,P] [B,Q,H] [B,Q,N] [B,Q,N]
+        a_cs = jnp.cumsum(aq, axis=1)             # inclusive [B,Q,H]
+        # intra-chunk (quadratic, attention-like)
+        cb = jnp.einsum("bqn,bkn->bqk", cq, bq,
+                        preferred_element_type=jnp.float32)       # [B,Q,Q]
+        ldec = jnp.exp(a_cs[:, :, None, :] - a_cs[:, None, :, :]) # [B,Q,K,H]
+        ldec = jnp.where(tri[None, :, :, None], ldec, 0.0)
+        y_intra = jnp.einsum("bqk,bqkh,bkhp->bqhp", cb, ldec, xq,
+                             preferred_element_type=jnp.float32)
+        # inter-chunk from carried state
+        y_inter = jnp.einsum("bqn,bhpn->bqhp", cq, hstate,
+                             preferred_element_type=jnp.float32)
+        y_inter = y_inter * jnp.exp(a_cs)[..., None]
+        # state update
+        a_sum = a_cs[:, -1, :]                                    # [B,H]
+        w = jnp.exp(a_sum[:, None, :] - a_cs)                     # [B,Q,H]
+        h_new = hstate * jnp.exp(a_sum)[..., None, None] + jnp.einsum(
+            "bqh,bqn,bqhp->bhpn", w, bq, xq,
+            preferred_element_type=jnp.float32)
+        return h_new, y_intra + y_inter
+
+    from repro.models.common import maybe_scan
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    hfin, y = maybe_scan(body, h0, (xdt_c, a_c, b_c, c_c), unroll)
+    y = y.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y, hfin
+
+
+def mamba2_forward(cfg, prm, x, return_state=False):
+    """Full-sequence mixer. x [B,S,d] -> [B,S,d]."""
+    b, s, d = x.shape
+    di = cfg.ssm_expand * d
+    hd = cfg.ssm_head_dim
+    h = di // hd
+    cd = cfg.compute_dtype
+
+    z = x @ prm["wz"].astype(cd)
+    xi = _causal_conv(x @ prm["wx"].astype(cd), prm["conv_x"].astype(cd))
+    bi = _causal_conv(x @ prm["wB"].astype(cd), prm["conv_B"].astype(cd))
+    ci = _causal_conv(x @ prm["wC"].astype(cd), prm["conv_C"].astype(cd))
+    xi, bi, ci = silu(xi), silu(bi), silu(ci)
+
+    dt = jax.nn.softplus(
+        (x @ prm["wdt"].astype(cd)).astype(jnp.float32) + prm["dt_bias"].astype(jnp.float32)
+    )                                                             # [B,S,H]
+    a = -jnp.exp(prm["a_log"].astype(jnp.float32))                # [H]
+    alog = dt * a[None, None, :]                                  # [B,S,H]
+
+    xh = xi.reshape(b, s, h, hd)
+    xdt = xh.astype(jnp.float32) * dt[..., None]
+    y, hfin = _ssd_chunked(xdt, alog, bi.astype(jnp.float32), ci.astype(jnp.float32),
+                           cfg.ssm_chunk, unroll=cfg.unroll_inner)
+    y = y + xh.astype(jnp.float32) * prm["d_skip"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, di).astype(cd)
+    y = rms_norm(y * silu(z), prm["norm"])
+    out = y @ prm["wo"].astype(cd)
+    if return_state:
+        conv_tail = jnp.concatenate(
+            [
+                (x @ prm["wx"].astype(cd))[:, -(cfg.ssm_conv - 1):, :],
+                (x @ prm["wB"].astype(cd))[:, -(cfg.ssm_conv - 1):, :],
+                (x @ prm["wC"].astype(cd))[:, -(cfg.ssm_conv - 1):, :],
+            ],
+            axis=-1,
+        )
+        return out, {"h": hfin, "conv": conv_tail}
+    return out
+
+
+def mamba2_decode(cfg, prm, x, cache, *, pos):
+    """Single-token recurrent step. x [B,1,d]; cache {h:[B,H,P,N], conv:[B,k-1,C]}."""
+    b = x.shape[0]
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    hd = cfg.ssm_head_dim
+    h = di // hd
+    k = cfg.ssm_conv
+    cd = cfg.compute_dtype
+
+    x0 = x[:, 0, :]
+    z = x0 @ prm["wz"].astype(cd)
+    raw = jnp.concatenate(
+        [x0 @ prm["wx"].astype(cd), x0 @ prm["wB"].astype(cd), x0 @ prm["wC"].astype(cd)],
+        axis=-1,
+    )                                                             # [B, di+2N]
+    win = jnp.concatenate([cache["conv"], raw[:, None, :]], axis=1)  # [B,k,C]
+    wfull = jnp.concatenate(
+        [prm["conv_x"].astype(cd), prm["conv_B"].astype(cd), prm["conv_C"].astype(cd)],
+        axis=-1,
+    )                                                             # [k, di+2N]
+    conv_out = jnp.einsum("bkc,kc->bc", win, wfull)
+    xi = silu(conv_out[:, :di])
+    bi = silu(conv_out[:, di : di + n]).astype(jnp.float32)
+    ci = silu(conv_out[:, di + n :]).astype(jnp.float32)
+
+    dt = jax.nn.softplus(
+        (x0 @ prm["wdt"].astype(cd)).astype(jnp.float32) + prm["dt_bias"].astype(jnp.float32)
+    )                                                             # [B,H]
+    a = -jnp.exp(prm["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a[None, :])                              # [B,H]
+
+    xh = xi.reshape(b, h, hd).astype(jnp.float32)
+    hnew = cache["h"] * decay[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, bi, xh)
+    y = jnp.einsum("bn,bhpn->bhp", ci, hnew)
+    y = y + xh * prm["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, di).astype(cd)
+    y = rms_norm(y * silu(z), prm["norm"])
+    out = (y @ prm["wo"].astype(cd))[:, None, :]
+    return out, {"h": hnew, "conv": win[:, 1:, :]}

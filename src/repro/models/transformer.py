@@ -1,0 +1,485 @@
+"""DecoderLM — unified decoder-only assembly for all assigned families.
+
+A model is a list of *segments*; each segment is a scanned stack of groups,
+and a group applies a static *period* of block types, e.g.
+
+  olmo/granite          period = (gqa-global+mlp,)            x L groups
+  h2o-danube3 (SWA)     period = (gqa-local+mlp,)             x L
+  gemma3 (5:1)          period = (local x5, global)           x L/6
+  phi3.5-moe            period = (gqa-global+moe,)            x L
+  deepseek-v3           prefix  = 3 unrolled (mla+dense)
+                        period = (mla+moe,)                   x 58
+  mamba2                period = (ssd,)                       x L
+  zamba2                period = (ssd x6, shared-attn+mlp)    x L/6
+  llama-3.2-vision      period = (self x4, self+cross)        x L/5
+
+Scan-over-groups keeps HLO size depth-independent (compile time on the
+512-way dry-run) while the per-period python loop keeps heterogeneous
+layer kinds fully static. `jax.checkpoint` wraps each group in training
+(remat policy: save only block boundaries).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import ffn as ffn_mod
+from repro.models import mamba2 as ssm_mod
+from repro.models.common import P, apply_norm, dense_init, init_norm, split_tree
+
+
+class BlockType(NamedTuple):
+    mixer: str = "gqa"      # gqa | mla | ssm | shared_attn
+    window: int = 0         # 0 = global attention
+    ffn: str = "dense"      # dense | moe | none
+    cross: bool = False     # + cross-attention sub-block (vlm / encdec decoder)
+    bidir: bool = False     # non-causal self-attention (encoder stacks)
+
+
+class Segment(NamedTuple):
+    period: tuple           # tuple[BlockType]
+    n_groups: int
+    scanned: bool = True
+
+
+class Ctx(NamedTuple):
+    mode: str               # train | prefill | decode
+    positions: jax.Array | None = None   # [B, S] for full-seq modes
+    pos: jax.Array | None = None         # [B] decode position
+    enc: jax.Array | None = None         # [B, Se, d] cross-attn memory
+    max_seq: int = 0                     # cache capacity for prefill
+
+
+def layer_plan(cfg: ArchConfig) -> tuple[list[Segment], list[BlockType]]:
+    """Returns (scanned segments, unrolled prefix block types)."""
+    mixer = "mla" if cfg.use_mla else ("ssm" if cfg.family in ("ssm", "hybrid") and not cfg.hybrid_period else "gqa")
+    prefix: list[BlockType] = []
+    if cfg.family == "ssm":
+        return [Segment((BlockType("ssm", ffn="none"),), cfg.n_layers)], prefix
+    if cfg.family == "hybrid":
+        per = (BlockType("ssm", ffn="none"),) * cfg.hybrid_period + (
+            BlockType("shared_attn", ffn="dense"),)
+        return [Segment(per, cfg.n_layers // cfg.hybrid_period)], prefix
+    if cfg.family == "vlm":
+        per = (BlockType("gqa"),) * (cfg.cross_attn_period - 1) + (
+            BlockType("gqa", cross=True),)
+        return [Segment(per, cfg.n_layers // cfg.cross_attn_period)], prefix
+    ffn_kind = "moe" if cfg.n_experts else "dense"
+    if cfg.attn_kind == "local":
+        per = (BlockType(mixer, window=cfg.local_window, ffn=ffn_kind),)
+        return [Segment(per, cfg.n_layers)], prefix
+    if cfg.attn_kind == "local_global":
+        p = cfg.local_global_period
+        per = (BlockType(mixer, window=cfg.local_window, ffn=ffn_kind),) * (p - 1) + (
+            BlockType(mixer, ffn=ffn_kind),)
+        return [Segment(per, cfg.n_layers // p)], prefix
+    # global attention; maybe dense prefix before MoE stack
+    if cfg.first_dense_layers:
+        prefix = [BlockType(mixer, ffn="dense")] * cfg.first_dense_layers
+        n_rest = cfg.n_layers - cfg.first_dense_layers
+        return [Segment((BlockType(mixer, ffn=ffn_kind),), n_rest)], prefix
+    return [Segment((BlockType(mixer, ffn=ffn_kind),), cfg.n_layers)], prefix
+
+
+# ------------------------------------------------------------------ blocks ----
+def _init_block(key, cfg: ArchConfig, bt: BlockType):
+    ks = jax.random.split(key, 6)
+    p = {"norm1": init_norm(ks[0], cfg, cfg.d_model)}
+    if bt.mixer == "gqa":
+        p["attn"] = attn.init_attention(ks[1], cfg)
+    elif bt.mixer == "mla":
+        p["attn"] = attn.init_mla(ks[1], cfg)
+    elif bt.mixer == "ssm":
+        p["mixer"] = ssm_mod.init_mamba2(ks[1], cfg)
+    elif bt.mixer == "shared_attn":
+        pass  # weights live in the shared top-level block
+    if bt.cross:
+        p["norm_cross"] = init_norm(ks[2], cfg, cfg.d_model)
+        p["cross"] = attn.init_attention(ks[3], cfg)
+    if bt.ffn != "none":
+        p["norm2"] = init_norm(ks[4], cfg, cfg.d_model)
+        p["ffn"] = ffn_mod.init_moe(ks[5], cfg) if bt.ffn == "moe" else ffn_mod.init_mlp(ks[5], cfg)
+    return p
+
+
+def _init_block_cache(cfg: ArchConfig, bt: BlockType, b: int, s_max: int):
+    """Zero cache arrays (P-wrapped with logical axes) for one block."""
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    dt = cfg.compute_dtype
+    c = {}
+    if bt.mixer == "gqa" or bt.mixer == "shared_attn":
+        s = min(bt.window, s_max) if bt.window else s_max
+        kv_axes = ("batch", "seq", "kv_heads", "head_dim")
+        c["k"] = P(jnp.zeros((b, s, kv, hd), dt), kv_axes)
+        c["v"] = P(jnp.zeros((b, s, kv, hd), dt), kv_axes)
+    elif bt.mixer == "mla":
+        c["c_kv"] = P(jnp.zeros((b, s_max, cfg.kv_lora_rank), dt),
+                      ("batch", "seq", None))
+        c["k_rope"] = P(jnp.zeros((b, s_max, cfg.qk_rope_dim), dt),
+                        ("batch", "seq", None))
+    elif bt.mixer == "ssm":
+        di = cfg.ssm_expand * cfg.d_model
+        h = di // cfg.ssm_head_dim
+        c["h"] = P(jnp.zeros((b, h, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+                   ("batch", "heads", None, None))
+        c["conv"] = P(jnp.zeros((b, cfg.ssm_conv - 1, di + 2 * cfg.ssm_state), dt),
+                      ("batch", None, "mlp"))
+    if bt.cross:
+        c["ck"] = P(jnp.zeros((b, _cross_len(cfg), kv, hd), dt),
+                    ("batch", None, "kv_heads", "head_dim"))
+        c["cv"] = P(jnp.zeros((b, _cross_len(cfg), kv, hd), dt),
+                    ("batch", None, "kv_heads", "head_dim"))
+    return c
+
+
+def _cross_len(cfg: ArchConfig) -> int:
+    return cfg.vision_seq if cfg.family == "vlm" else cfg.encoder_seq
+
+
+def _pad_cache_seq(full, part):
+    """Place prefill-length cache `part` into capacity-sized `full` at t=0."""
+    return jax.tree.map(
+        lambda f, pp: jax.lax.dynamic_update_slice(f, pp.astype(f.dtype),
+                                                   (0,) * f.ndim),
+        full, part)
+
+
+class BlockApplier:
+    """Applies one block type in any mode; closes over cfg + shared params."""
+
+    def __init__(self, cfg: ArchConfig, shared=None):
+        self.cfg = cfg
+        self.shared = shared  # zamba2 shared transformer block params
+
+    def __call__(self, bt: BlockType, bp, x, ctx: Ctx, cache=None):
+        cfg = self.cfg
+        aux = jnp.float32(0.0)
+        new_cache = {}
+        h = apply_norm(cfg, bp["norm1"], x)
+
+        if bt.mixer == "ssm":
+            if ctx.mode == "decode":
+                out, new_mix = ssm_mod.mamba2_decode(cfg, bp["mixer"], h,
+                                                     {"h": cache["h"], "conv": cache["conv"]},
+                                                     pos=ctx.pos)
+                new_cache.update(new_mix)
+            elif ctx.mode == "prefill":
+                out, st = ssm_mod.mamba2_forward(cfg, bp["mixer"], h, return_state=True)
+                new_cache.update(st)
+            else:
+                out = ssm_mod.mamba2_forward(cfg, bp["mixer"], h)
+        elif bt.mixer == "mla":
+            if ctx.mode == "decode":
+                out, new_mla = attn.mla_decode(cfg, bp["attn"], h,
+                                               {"c_kv": cache["c_kv"], "k_rope": cache["k_rope"]},
+                                               pos=ctx.pos)
+                new_cache.update(new_mla)
+            else:
+                out, (ckv, krope) = attn.mla_forward(cfg, bp["attn"], h,
+                                                     positions=ctx.positions)
+                if ctx.mode == "prefill":
+                    new_cache["c_kv"], new_cache["k_rope"] = ckv, krope
+        else:  # gqa / shared_attn
+            ap = self.shared["attn"] if bt.mixer == "shared_attn" else bp["attn"]
+            if ctx.mode == "decode":
+                out, kvc = attn.attention_decode(cfg, ap, h,
+                                                 {"k": cache["k"], "v": cache["v"]},
+                                                 pos=ctx.pos, window=bt.window)
+                new_cache.update(kvc)
+            else:
+                out, (kk, vv) = attn.attention_forward(
+                    cfg, ap, h, positions=ctx.positions, causal=not bt.bidir,
+                    window=bt.window)
+                if ctx.mode == "prefill":
+                    if bt.window:  # rolling window cache: keep last W roped keys
+                        w = min(bt.window, kk.shape[1])
+                        new_cache["k"], new_cache["v"] = kk[:, -w:], vv[:, -w:]
+                    else:
+                        new_cache["k"], new_cache["v"] = kk, vv
+        x = x + out
+
+        if bt.cross:
+            hc = apply_norm(cfg, bp["norm_cross"], x)
+            if ctx.mode == "decode":
+                out, _ = attn.attention_decode(cfg, bp["cross"], hc, None, pos=ctx.pos,
+                                               cross_kv=(cache["ck"], cache["cv"]))
+                # static cross KV passes through (keeps cache pytree stable)
+                new_cache["ck"], new_cache["cv"] = cache["ck"], cache["cv"]
+            else:
+                out, (ck, cv) = attn.attention_forward(
+                    cfg, bp["cross"], hc, positions=ctx.positions, kv_override=ctx.enc)
+                if ctx.mode == "prefill":
+                    new_cache["ck"], new_cache["cv"] = ck, cv
+            x = x + out
+
+        if bt.ffn != "none":
+            fp = self.shared["ffn"] if bt.mixer == "shared_attn" else bp["ffn"]
+            np_ = self.shared["norm2"] if bt.mixer == "shared_attn" else bp["norm2"]
+            h2 = apply_norm(cfg, np_, x)
+            if bt.ffn == "moe":
+                if ctx.mode == "train":
+                    out, a = ffn_mod.moe_forward(cfg, fp, h2, return_aux=True)
+                    aux = aux + a
+                else:
+                    out = ffn_mod.moe_forward(cfg, fp, h2)
+            else:
+                out = ffn_mod.mlp_forward(cfg, fp, h2)
+            x = x + out
+        return x, new_cache, aux
+
+
+# ---------------------------------------------------------------- the LM ----
+class DecoderLM:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+        self.segments, self.prefix = layer_plan(cfg)
+
+    # ---------- init ----------
+    def init_params(self, key):
+        cfg = self.cfg
+        ks = iter(jax.random.split(key, 64))
+        prm = {
+            "embed": dense_init(next(ks), (cfg.vocab_size, cfg.d_model),
+                                cfg.d_model, cfg.param_dtype, ("vocab", "embed")),
+            "final_norm": init_norm(next(ks), cfg, cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            prm["head"] = dense_init(next(ks), (cfg.d_model, cfg.vocab_size),
+                                     cfg.d_model, cfg.param_dtype, ("embed", "vocab"))
+        if cfg.family == "hybrid":
+            prm["shared"] = {
+                "attn": attn.init_attention(next(ks), cfg),
+                "norm2": init_norm(next(ks), cfg, cfg.d_model),
+                "ffn": ffn_mod.init_mlp(next(ks), cfg),
+            }
+        for i, bt in enumerate(self.prefix):
+            prm[f"prefix{i}"] = _init_block(next(ks), cfg, bt)
+        for si, seg in enumerate(self.segments):
+            pos_params = []
+            for pi, bt in enumerate(seg.period):
+                if seg.scanned and seg.n_groups > 1:
+                    stacked = _stack_inits(
+                        [_init_block(k, cfg, bt)
+                         for k in jax.random.split(next(ks), seg.n_groups)])
+                else:
+                    stacked = _stack_inits([_init_block(next(ks), cfg, bt)])
+                pos_params.append(stacked)
+            prm[f"seg{si}"] = {f"pos{pi}": pp for pi, pp in enumerate(pos_params)}
+        if cfg.mtp:
+            prm["mtp_proj"] = dense_init(next(ks), (2 * cfg.d_model, cfg.d_model),
+                                         2 * cfg.d_model, cfg.param_dtype,
+                                         ("embed", "embed2"))
+            bt = self.segments[-1].period[-1]
+            prm["mtp_block"] = _init_block(next(ks), cfg, bt)
+            prm["mtp_norm"] = init_norm(next(ks), cfg, cfg.d_model)
+        return prm
+
+    def init_cache(self, b: int, s_max: int):
+        cfg = self.cfg
+        cache = {}
+        for i, bt in enumerate(self.prefix):
+            cache[f"prefix{i}"] = _init_block_cache(cfg, bt, b, s_max)
+        for si, seg in enumerate(self.segments):
+            seg_c = {}
+            for pi, bt in enumerate(seg.period):
+                one = _init_block_cache(cfg, bt, b, s_max)
+                seg_c[f"pos{pi}"] = jax.tree.map(
+                    lambda p: P(jnp.broadcast_to(p.value[None], (seg.n_groups,) + p.value.shape),
+                                ("layers",) + p.axes),
+                    one, is_leaf=lambda x: isinstance(x, P))
+            cache[f"seg{si}"] = seg_c
+        return cache
+
+    # ---------- forward ----------
+    def _backbone(self, prm, x, ctx: Ctx, cache=None):
+        from repro.distributed.sharding import constrain
+
+        cfg = self.cfg
+        applier = BlockApplier(cfg, shared=prm.get("shared"))
+        aux_total = jnp.float32(0.0)
+        new_cache = {}
+        act_axes = ("batch", "seq", None)
+        x = constrain(x, act_axes)
+
+        for i, bt in enumerate(self.prefix):
+            c = cache.get(f"prefix{i}") if cache else None
+
+            def pfx(bp, x, cc, bt=bt):
+                return applier(bt, bp, x, ctx, cc)
+
+            if cfg.remat and ctx.mode == "train":
+                pfx = jax.checkpoint(pfx)
+            x, nc, aux = pfx(prm[f"prefix{i}"], x, c)
+            x = constrain(x, act_axes)
+            aux_total += aux
+            if nc:
+                new_cache[f"prefix{i}"] = nc
+
+        for si, seg in enumerate(self.segments):
+            sp = prm[f"seg{si}"]
+            sc = cache.get(f"seg{si}") if cache else None
+
+            def group_body(carry, xs):
+                x, aux = carry
+                x = constrain(x, act_axes)
+                outs = {}
+                for pi, bt in enumerate(seg.period):
+                    bp = xs[f"pos{pi}"]
+                    cc = xs.get(f"cache{pi}")
+                    x, nc, a = applier(bt, bp, x, ctx, cc)
+                    x = constrain(x, act_axes)
+                    aux = aux + a
+                    outs[f"cache{pi}"] = nc
+                return (x, aux), outs
+
+            body = group_body
+            if cfg.remat and ctx.mode == "train":
+                import os
+                pol = os.environ.get("REPRO_REMAT_POLICY")
+                if pol == "dots":
+                    body = jax.checkpoint(
+                        group_body,
+                        policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+                else:
+                    body = jax.checkpoint(group_body)
+
+            xs = {f"pos{pi}": sp[f"pos{pi}"] for pi in range(len(seg.period))}
+            if sc is not None:
+                for pi in range(len(seg.period)):
+                    xs[f"cache{pi}"] = sc[f"pos{pi}"]
+            (x, aux_total), seg_out = jax.lax.scan(body, (x, aux_total), xs)
+            if ctx.mode != "train":
+                new_cache[f"seg{si}"] = {
+                    f"pos{pi}": seg_out[f"cache{pi}"] for pi in range(len(seg.period))}
+        return x, new_cache, aux_total
+
+    def _embed(self, prm, tokens):
+        cd = self.cfg.compute_dtype
+        return prm["embed"].astype(cd)[tokens]
+
+    def _logits(self, prm, x):
+        cd = self.cfg.compute_dtype
+        x = apply_norm(self.cfg, prm["final_norm"], x)
+        head = prm["embed"].T if self.cfg.tie_embeddings else prm["head"]
+        return x @ head.astype(cd)
+
+    def _head_fn(self, prm):
+        cfg = self.cfg
+
+        def head_fn(x):
+            x = apply_norm(cfg, prm["final_norm"], x)
+            head = prm["embed"].T if cfg.tie_embeddings else prm["head"]
+            return x @ head.astype(cfg.compute_dtype)
+
+        return head_fn
+
+    def loss(self, prm, batch):
+        """Next-token CE + MoE aux (+ MTP). batch: tokens [B,S] (+ stubs)."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        ctx = Ctx(mode="train", positions=positions, enc=batch.get("enc"))
+        x = self._embed(prm, tokens)
+        h, _, aux = self._backbone(prm, x, ctx)
+        # shifted labels with the final position masked out
+        labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+        mask = jnp.ones((b, s), jnp.float32).at[:, -1].set(0.0)
+        ce = _xent_chunked(self._head_fn(prm), h, labels, mask,
+                           unroll=cfg.unroll_inner)
+        loss = ce + cfg.router_aux_weight * aux
+        metrics = {"ce": ce, "aux": aux}
+        if cfg.mtp:
+            # predict t+2 from (h_t, emb(t+1)) through one extra block
+            emb_next = self._embed(prm, labels)  # emb(t+1), last pos masked
+            cat = jnp.concatenate([apply_norm(cfg, prm["mtp_norm"], h), emb_next],
+                                  axis=-1)
+            hm = cat @ prm["mtp_proj"].astype(cfg.compute_dtype)
+            applier = BlockApplier(cfg, shared=prm.get("shared"))
+            ctx2 = Ctx(mode="train", positions=positions)
+            bt = self.segments[-1].period[-1]
+
+            def mtp_fn(bp, hh):
+                return applier(bt, bp, hh, ctx2)
+
+            if cfg.remat:
+                mtp_fn = jax.checkpoint(mtp_fn)
+            hm, _, aux2 = mtp_fn(prm["mtp_block"], hm)
+            labels2 = jnp.concatenate([tokens[:, 2:], tokens[:, :2]], axis=1)
+            mask2 = jnp.ones((b, s), jnp.float32).at[:, -2:].set(0.0)
+            mtp_ce = _xent_chunked(self._head_fn(prm), hm, labels2, mask2,
+                                   unroll=cfg.unroll_inner)
+            loss = loss + 0.3 * mtp_ce + cfg.router_aux_weight * aux2
+            metrics["mtp_ce"] = mtp_ce
+        return loss, metrics
+
+    def prefill(self, prm, batch):
+        """Full-seq forward; returns (last-position logits, cache)."""
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+        ctx = Ctx(mode="prefill", positions=positions, enc=batch.get("enc"),
+                  max_seq=s)
+        x = self._embed(prm, tokens)
+        h, cache, _ = self._backbone(prm, x, ctx)
+        return self._logits(prm, h[:, -1:]), cache
+
+    def decode_step(self, prm, cache, tokens, pos, enc=None):
+        """One token: tokens [B,1], pos [B]. Returns (logits [B,1,V], cache)."""
+        ctx = Ctx(mode="decode", pos=pos, enc=enc)
+        x = self._embed(prm, tokens)
+        h, new_cache, _ = self._backbone(prm, x, ctx, cache)
+        return self._logits(prm, h), new_cache
+
+
+def _xent(logits, labels):
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32), labels[..., None],
+                               axis=-1)[..., 0]
+    return (lse - gold).mean()
+
+
+def _xent_chunked(head_fn, h, labels, mask, chunk=512, unroll=False):
+    """Sequence-chunked CE: never materializes [B, S, V] logits.
+
+    Essential for 256k-vocab archs (gemma3): peak logits memory becomes
+    B × chunk × V/shards. The chunk body is rematerialized on backward.
+    """
+    b, s, d = h.shape
+    c = min(chunk, s)
+    nc = -(-s // c)
+    pad = nc * c - s
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hc = h.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, nc, c).transpose(1, 0, 2)
+    mc = mask.reshape(b, nc, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def body(acc, xs):
+        hh, ll, mm = xs
+        logits = head_fn(hh).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        ce = ((lse - gold) * mm).sum()
+        return (acc[0] + ce, acc[1] + mm.sum()), None
+
+    from repro.models.common import maybe_scan
+
+    (tot, cnt), _ = maybe_scan(body, (jnp.float32(0.0), jnp.float32(0.0)),
+                               (hc, lc, mc), unroll)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def _stack_inits(dicts):
+    """Stack a list of P-trees along a new leading 'layers' axis."""
+    return jax.tree.map(
+        lambda *ps: P(jnp.stack([p.value for p in ps]), ("layers",) + ps[0].axes),
+        *dicts, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,12 @@
+"""build_model(cfg) — the single entry point from config to model object."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import DecoderLM
+
+
+def build_model(cfg: ArchConfig):
+    if cfg.family == "encdec":
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)

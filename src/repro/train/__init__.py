@@ -1,0 +1,9 @@
+from repro.train.optimizer import AdamWConfig, init_opt_state, adamw_update
+from repro.train.train_step import TrainConfig, make_train_step, make_init_state
+from repro.train.serve_step import make_prefill, make_decode_step
+
+__all__ = [
+    "AdamWConfig", "init_opt_state", "adamw_update",
+    "TrainConfig", "make_train_step", "make_init_state",
+    "make_prefill", "make_decode_step",
+]

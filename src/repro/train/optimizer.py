@@ -1,0 +1,150 @@
+"""AdamW with optionally block-quantized (int8) moments.
+
+Why: the assigned deepseek-v3-671b cell must fit 256 × 16 GB chips.
+fp32 m/v costs 8 B/param (5.4 TB for 671B) — int8 moments with per-128-block
+scales cost ~2.06 B/param, the difference between OOM and fitting (napkin
+math in EXPERIMENTS.md §Dry-run). Quantization is symmetric per block of the
+last dim; error behaves like stochastic rounding noise on the moment EMA and
+is a standard distributed-optimization trick (8-bit Adam).
+
+Moment tensors inherit the param's logical sharding axes; scale tensors
+shard like the param with the last dim shrunk by 128 (divisibility-aware
+rules handle the fallback).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import P
+
+QBLOCK = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "float32"   # float32 | bfloat16 | int8
+    grad_clip: float = 1.0
+
+
+class QTensor(NamedTuple):
+    q: jax.Array       # int8 quantized values
+    scale: jax.Array   # f32 per-block scales (last dim / QBLOCK)
+
+
+def _pad_to_block(x):
+    last = x.shape[-1]
+    pad = (-last) % QBLOCK
+    if pad:
+        x = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    return x, pad
+
+
+def quantize(x: jax.Array) -> QTensor:
+    xp, _ = _pad_to_block(x.astype(jnp.float32))
+    blocks = xp.reshape(*xp.shape[:-1], xp.shape[-1] // QBLOCK, QBLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale[..., None], 1e-20))
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    return QTensor(q=q.reshape(xp.shape), scale=scale)
+
+
+def dequantize(qt: QTensor, shape) -> jax.Array:
+    q = qt.q.reshape(*qt.q.shape[:-1], qt.q.shape[-1] // QBLOCK, QBLOCK)
+    x = q.astype(jnp.float32) * qt.scale[..., None]
+    x = x.reshape(qt.q.shape)
+    return x[..., : shape[-1]].reshape(shape)
+
+
+def _moment_init(p_leaf: P, cfg: AdamWConfig):
+    v = p_leaf.value
+    if cfg.moment_dtype == "int8":
+        padded = v.shape[-1] + ((-v.shape[-1]) % QBLOCK)
+        qshape = v.shape[:-1] + (padded,)
+        sshape = v.shape[:-1] + (padded // QBLOCK,)
+        return {
+            "q": P(jnp.zeros(qshape, jnp.int8), p_leaf.axes),
+            "scale": P(jnp.zeros(sshape, jnp.float32), p_leaf.axes),
+        }
+    dt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    return P(jnp.zeros(v.shape, dt), p_leaf.axes)
+
+
+def init_opt_state(param_tree, cfg: AdamWConfig):
+    """param_tree: P-tree. Returns P-tree opt state {m, v, count}."""
+    is_p = lambda x: isinstance(x, P)
+    return {
+        "m": jax.tree.map(lambda p: _moment_init(p, cfg), param_tree, is_leaf=is_p),
+        "v": jax.tree.map(lambda p: _moment_init(p, cfg), param_tree, is_leaf=is_p),
+        "count": P(jnp.zeros((), jnp.int32), ()),
+    }
+
+
+def _read_moment(m, shape, cfg: AdamWConfig, second: bool = False):
+    if cfg.moment_dtype == "int8":
+        x = dequantize(QTensor(m["q"], m["scale"]), shape)
+        # v is stored in sqrt-domain: squaring restores it non-negative with
+        # bounded *relative* error (the 8-bit Adam trick for the 2nd moment)
+        return x * x if second else x
+    return m.astype(jnp.float32)
+
+
+def _write_moment(x, cfg: AdamWConfig, second: bool = False):
+    if cfg.moment_dtype == "int8":
+        if second:
+            x = jnp.sqrt(jnp.maximum(x, 0.0))
+        qt = quantize(x)
+        return {"q": qt.q, "scale": qt.scale}
+    dt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    return x.astype(dt)
+
+
+def adamw_update(params, grads, opt_state, cfg: AdamWConfig):
+    """Pure-value trees in, pure-value trees out (no P wrappers)."""
+    count = opt_state["count"] + 1
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    # global-norm clip
+    if cfg.grad_clip > 0:
+        gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                          for g in jax.tree.leaves(grads)) + 1e-12)
+        cscale = jnp.minimum(1.0, cfg.grad_clip / gn)
+    else:
+        cscale = 1.0
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(opt_state["m"])
+    flat_v = treedef.flatten_up_to(opt_state["v"])
+
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        g32 = g.astype(jnp.float32) * cscale
+        m32 = _read_moment(m, p.shape, cfg)
+        v32 = _read_moment(v, p.shape, cfg, second=True)
+        m32 = cfg.b1 * m32 + (1 - cfg.b1) * g32
+        v32 = cfg.b2 * v32 + (1 - cfg.b2) * g32 * g32
+        mhat = m32 / b1c
+        vhat = v32 / b2c
+        upd = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        new_p.append((p.astype(jnp.float32) - cfg.lr * upd).astype(p.dtype))
+        new_m.append(_write_moment(m32, cfg))
+        new_v.append(_write_moment(v32, cfg, second=True))
+
+    return (
+        jax.tree.unflatten(treedef, new_p),
+        {
+            "m": jax.tree.unflatten(treedef, new_m),
+            "v": jax.tree.unflatten(treedef, new_v),
+            "count": count,
+        },
+    )

@@ -1,0 +1,24 @@
+"""Serving steps: prefill and single-token decode, pjit-ready."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def make_prefill(model):
+    def prefill(params, batch):
+        return model.prefill(params, batch)
+
+    return prefill
+
+
+def make_decode_step(model, greedy: bool = True):
+    def decode_step(params, cache, tokens, pos, enc=None):
+        logits, cache = model.decode_step(params, cache, tokens, pos, enc)
+        if greedy:
+            next_tok = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        else:
+            next_tok = None
+        return logits, next_tok, cache
+
+    return decode_step

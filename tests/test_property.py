@@ -1,0 +1,76 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gbdt import train_gbdt
+from repro.core.estimator import spearman
+from repro.filters.predicates import (FilterSpec, PRED_CONTAIN, PRED_EQUAL,
+                                      PRED_RANGE, pack_labels,
+                                      predicate_contains, predicate_equals)
+from repro.index.builder import _best_r_distinct
+import jax.numpy as jnp
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 63), max_size=6), min_size=1, max_size=20),
+       st.lists(st.integers(0, 63), max_size=4))
+def test_predicate_containment_matches_sets(label_sets, query):
+    packed = pack_labels([tuple(set(s)) for s in label_sets], 64)
+    qmask = pack_labels([tuple(set(query))], 64)[0]
+    got = np.asarray(predicate_contains(jnp.asarray(packed), jnp.asarray(qmask)))
+    want = np.array([set(query) <= set(s) for s in label_sets])
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.lists(st.integers(0, 31), max_size=5), min_size=1, max_size=20),
+       st.lists(st.integers(0, 31), max_size=5))
+def test_predicate_equality_matches_sets(label_sets, query):
+    packed = pack_labels([tuple(set(s)) for s in label_sets], 32)
+    qmask = pack_labels([tuple(set(query))], 32)[0]
+    got = np.asarray(predicate_equals(jnp.asarray(packed), jnp.asarray(qmask)))
+    want = np.array([set(query) == set(s) for s in label_sets])
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 40), st.integers(1, 16), st.integers(0, 2**31 - 1))
+def test_best_r_distinct_properties(n_cand, r, seed):
+    rng = np.random.default_rng(seed)
+    cand = rng.integers(-1, 50, size=(4, n_cand)).astype(np.int32)
+    dist = rng.random((4, n_cand)).astype(np.float32)
+    self_ids = rng.integers(0, 50, size=4).astype(np.int32)
+    out_c, out_d = _best_r_distinct(cand, dist, r, self_ids)
+    for row in range(4):
+        vals = out_c[row][out_c[row] >= 0]
+        # distinct, no self
+        assert len(set(vals.tolist())) == len(vals)
+        assert self_ids[row] not in vals
+        # sorted ascending by distance
+        dd = out_d[row][np.isfinite(out_d[row])]
+        assert (np.diff(dd) >= 0).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(30, 200), st.integers(0, 2**31 - 1))
+def test_gbdt_predictions_bounded_by_targets(n, seed):
+    """GBDT with shrinkage must predict within the convex hull-ish range."""
+    rng = np.random.default_rng(seed)
+    x = rng.normal(size=(n, 4)).astype(np.float32)
+    y = rng.normal(size=n)
+    model = train_gbdt(x, y, n_trees=30, depth=3, learning_rate=0.3)
+    p = model.predict(x)
+    lo, hi = y.min(), y.max()
+    span = max(hi - lo, 1e-6)
+    assert p.min() >= lo - 0.5 * span and p.max() <= hi + 0.5 * span
+
+
+def test_spearman_invariances():
+    rng = np.random.default_rng(0)
+    a = rng.normal(size=100)
+    assert spearman(a, a) == pytest.approx(1.0)
+    assert spearman(a, -a) == pytest.approx(-1.0)
+    assert abs(spearman(a, rng.normal(size=100))) < 0.35
+    # monotone-transform invariance
+    assert spearman(a, np.exp(a)) == pytest.approx(1.0)
