@@ -80,7 +80,9 @@ def get_engine(preset: str, verbose=True):
         graph.save(gp)
         if verbose:
             print(f"# built graph for {preset} in {time.time()-t0:.0f}s")
-    return ds, graph, SearchEngine.build(ds, graph)
+    # backend override for apples-to-apples sweeps: REPRO_BACKEND=pallas
+    return ds, graph, SearchEngine.build(ds, graph,
+                                         backend=os.environ.get("REPRO_BACKEND"))
 
 
 def get_bench(preset: str, kind: str, verbose=True) -> Bench:

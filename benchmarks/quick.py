@@ -1,0 +1,94 @@
+"""`--quick` smoke benchmark: traversal-backend throughput at scale.
+
+Times the full lockstep search (dense vs fused-Pallas backend) on a
+synthetic N=100k / B=64 workload with a fixed NDC budget, so both backends
+do identical graph work and the measured delta is purely the per-step hot
+path (distances + queue/result merges). The graph is a random regular
+digraph — navigability is irrelevant for throughput timing, and building a
+real Vamana index on 100k points would dominate the smoke-run wall time.
+
+Timing discipline (this container's CPU timings are noisy): one untimed
+warmup call per backend to absorb compilation, then best-of-3 timed runs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+N = 100_000
+DIM = 64
+DEGREE = 32
+BATCH = 64
+QUEUE = 512
+K = 10
+BUDGET = 4_000
+REPEATS = 3
+
+
+def _timed(fn):
+    """Best-of-REPEATS wall time of fn() (after one warmup) + last result."""
+    import jax
+
+    jax.block_until_ready(fn())  # warmup: compile + first run
+    best, out = float("inf"), None
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run(seed: int = 0):
+    import jax.numpy as jnp
+
+    from repro.core import BIG_BUDGET, SearchConfig, SearchEngine
+    from repro.filters.predicates import FilterSpec, PRED_RANGE
+
+    rng = np.random.default_rng(seed)
+    vectors = rng.normal(size=(N, DIM)).astype(np.float32)
+    vectors /= np.linalg.norm(vectors, axis=1, keepdims=True)
+    neighbors = rng.integers(0, N, size=(N, DEGREE), dtype=np.int64)
+    neighbors[neighbors == np.arange(N)[:, None]] = 0  # drop self loops
+    neighbors = neighbors.astype(np.int32)
+    values = rng.random(N).astype(np.float32)
+
+    queries = vectors[rng.integers(0, N, BATCH)] + 0.05 * rng.normal(
+        size=(BATCH, DIM)).astype(np.float32)
+    lo = np.full(BATCH, 0.2, np.float32)
+    hi = np.full(BATCH, 0.8, np.float32)
+    spec = FilterSpec(PRED_RANGE, None, lo, hi)
+
+    engine = SearchEngine(
+        base_vectors=jnp.asarray(vectors),
+        label_attrs=jnp.zeros((N, 1), jnp.uint32),
+        value_attrs=jnp.asarray(values),
+        neighbors=jnp.asarray(neighbors),
+        entry_point=0,
+    )
+    cfg = SearchConfig(k=K, queue_size=QUEUE, pred_kind=PRED_RANGE)
+
+    rows = []
+    states = {}
+    for backend in ("dense", "pallas"):
+        c = dataclasses.replace(cfg, backend=backend)
+        sec, states[backend] = _timed(
+            lambda: engine.search(c, queries, spec, BUDGET))
+        ndc = float(np.asarray(states[backend].cnt).mean())
+        rows.append({
+            "name": f"quick_{backend}",
+            "latency_us_per_query": sec / BATCH * 1e6,
+            "wall_s": sec,
+            "mean_ndc": ndc,
+            "n": N, "batch": BATCH, "queue": QUEUE, "budget": BUDGET,
+        })
+
+    same = bool(np.array_equal(np.asarray(states["dense"].res_idx),
+                               np.asarray(states["pallas"].res_idx)))
+    speedup = rows[0]["wall_s"] / rows[1]["wall_s"]
+    rows.append({"name": "quick_speedup", "latency_us_per_query": 0.0,
+                 "pallas_speedup_vs_dense": speedup,
+                 "topk_indices_identical": same})
+    return rows

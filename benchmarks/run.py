@@ -22,8 +22,27 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig3,fig56,table3,fig7,fig8,fig910")
+    ap.add_argument("--quick", action="store_true",
+                    help="smoke mode: backend-throughput benchmark only "
+                         "(N=100k, B=64, warmup + best-of-3 timing)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+
+    if args.quick:
+        from benchmarks import quick
+
+        rows = quick.run()
+        for r in rows:
+            _row(r["name"], r["latency_us_per_query"],
+                 **{k: (round(v, 4) if isinstance(v, float) else v)
+                    for k, v in r.items()
+                    if k not in ("name", "latency_us_per_query")})
+        out = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "bench_quick.json")
+        os.makedirs(os.path.dirname(out), exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(rows, f, indent=2, default=str)
+        return
 
     def want(x):
         return only is None or x in only

@@ -8,6 +8,8 @@ Shows, for a batch of mixed easy/hard filtered queries:
 
     PYTHONPATH=src python examples/adaptive_termination_demo.py
 """
+import os
+
 import numpy as np
 
 from repro.core import (CostEstimator, SearchConfig, SearchEngine, BIG_BUDGET,
@@ -23,7 +25,8 @@ from repro.index.bruteforce import recall_at_k
 def main():
     ds = make_dataset(n=8000, dim=48, n_clusters=16, alphabet_size=48, seed=0)
     graph = build_graph_index(ds.vectors, degree=24, seed=0)
-    engine = SearchEngine.build(ds, graph)
+    engine = SearchEngine.build(ds, graph,
+                                backend=os.environ.get("REPRO_BACKEND", "pallas"))
     cfg = SearchConfig(k=10, queue_size=512, pred_kind=PRED_CONTAIN)
 
     wl_tr = make_label_workload(ds, batch=512, kind="contain", seed=10)

@@ -3,6 +3,7 @@ and compare adaptive termination against the naive fixed-beam baseline.
 
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
 import time
 
 import numpy as np
@@ -24,7 +25,8 @@ def main():
     graph = build_graph_index(ds.vectors, degree=24, seed=0)
     print(f"   built in {time.time()-t0:.1f}s, mean degree "
           f"{graph.out_degrees().mean():.1f}")
-    engine = SearchEngine.build(ds, graph)
+    engine = SearchEngine.build(ds, graph,
+                                backend=os.environ.get("REPRO_BACKEND", "pallas"))
     cfg = SearchConfig(k=10, queue_size=512, pred_kind=PRED_CONTAIN)
 
     print("== 3. offline W_q ground truth + GBDT estimator (paper 4.3)")

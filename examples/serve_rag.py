@@ -12,6 +12,7 @@ query by predicted budgets, and the batch tail is clamped
 
     PYTHONPATH=src python examples/serve_rag.py
 """
+import os
 import time
 
 import jax
@@ -36,7 +37,8 @@ def main():
     print("== retrieval substrate (E2E)")
     ds = make_dataset(n=6000, dim=48, n_clusters=12, alphabet_size=32, seed=0)
     graph = build_graph_index(ds.vectors, degree=24, seed=0)
-    engine = SearchEngine.build(ds, graph)
+    engine = SearchEngine.build(ds, graph,
+                                backend=os.environ.get("REPRO_BACKEND", "pallas"))
     cfg = SearchConfig(k=4, queue_size=256, pred_kind=PRED_CONTAIN)
     wl_tr = make_label_workload(ds, batch=256, kind="contain", seed=7)
     td = generate_training_data(engine, ds, wl_tr, cfg, probe_budget=64, chunk=128)

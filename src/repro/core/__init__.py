@@ -1,7 +1,13 @@
 # The paper's primary contribution: E2E cost estimation + adaptive
 # termination for filtered AKNN search, as a composable JAX module.
 from repro.core.search import SearchConfig, SearchState, run_search, init_state
-from repro.core.engine import SearchEngine, BIG_BUDGET
+from repro.core.backends import (
+    TraversalBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from repro.core.engine import SearchEngine, BIG_BUDGET, make_search_mesh
 from repro.core.features import (
     extract_features,
     ablate_filter_features,
@@ -22,6 +28,11 @@ __all__ = [
     "init_state",
     "SearchEngine",
     "BIG_BUDGET",
+    "make_search_mesh",
+    "TraversalBackend",
+    "available_backends",
+    "get_backend",
+    "register_backend",
     "extract_features",
     "ablate_filter_features",
     "FEATURE_NAMES",

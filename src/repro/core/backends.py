@@ -1,0 +1,162 @@
+"""Traversal-backend layer: pluggable implementations of the per-step hot path.
+
+A `TraversalBackend` owns the arithmetic core of one lockstep step — neighbor
+distance evaluation and the two sorted-buffer merges (candidate queue top-M,
+result set top-K). Everything else (pop, visited bitset, predicate, counters)
+is shared in `repro.core.step`, so a backend is ~30 lines of focused code.
+
+Registered backends:
+  dense    reference path: jnp einsum distances + two stable argsort merges
+           (optionally routing distances through the Pallas distance kernel
+           via cfg.use_pallas — the pre-refactor behavior).
+  pallas   fused hot path: one Pallas kernel computes distances on the MXU,
+           applies the filter/visited mask, and merges queue + result buffers
+           with bitonic top-M/top-K networks — no argsort, one VMEM pass
+           (see repro.kernels.fused_step).
+
+New backends register with `@register_backend("name")` and become selectable
+via `SearchConfig(backend="name")` / `SearchEngine.build(..., backend="name")`.
+"""
+from __future__ import annotations
+
+from typing import Protocol
+
+import jax.numpy as jnp
+
+from repro.core.state import INF, SearchConfig
+
+
+class TraversalBackend(Protocol):
+    """Per-step hot path: distances + queue/result merges."""
+
+    name: str
+
+    def merge_step(self, cfg: SearchConfig, queries, xv, nb, dist_mask, valid,
+                   cand_dist, cand_idx, cand_exp, cand_valid, res_dist, res_idx):
+        """Evaluate neighbor distances and merge into the sorted buffers.
+
+        queries   [B, d]   query vectors
+        xv        [B, R', d] gathered neighbor vectors
+        nb        [B, R']  neighbor ids (-1 padded)
+        dist_mask [B, R']  which neighbors get a distance (NDC accounting)
+        valid     [B, R']  predicate-valid among the new neighbors
+        cand_*    [B, M]   sorted candidate queue buffers
+        res_*     [B, K]   sorted result buffers
+
+        Returns (cand_dist, cand_idx, cand_exp, cand_valid, res_dist, res_idx)
+        with the new entries merged in, each buffer sorted ascending.
+        """
+        ...
+
+
+_BACKENDS: dict[str, TraversalBackend] = {}
+
+
+def register_backend(name: str):
+    """Class decorator: instantiate and register a backend under `name`."""
+
+    def deco(cls):
+        inst = cls()
+        inst.name = name
+        _BACKENDS[name] = inst
+        return cls
+
+    return deco
+
+
+def get_backend(name: str) -> TraversalBackend:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown traversal backend {name!r}; "
+            f"registered: {sorted(_BACKENDS)}"
+        ) from None
+
+
+def available_backends() -> list[str]:
+    return sorted(_BACKENDS)
+
+
+# --------------------------------------------------------------------------
+# dense reference backend
+# --------------------------------------------------------------------------
+def _sqdist(q, x, use_pallas: bool):
+    """q[B,d], x[B,R,d] -> [B,R] squared L2."""
+    if use_pallas:
+        from repro.kernels import ops as kops
+
+        return kops.batched_sqdist(q, x)
+    from repro.kernels.distance import sqdist_bdrd
+
+    return sqdist_bdrd(q, x)
+
+
+def _merge_queue(dist, idx, exp, valid, new_dist, new_idx, new_valid, m):
+    """Merge sorted [B,M] buffers with new [B,R] entries; keep best M."""
+    d = jnp.concatenate([dist, new_dist], axis=1)
+    i = jnp.concatenate([idx, new_idx], axis=1)
+    e = jnp.concatenate([exp, jnp.zeros_like(new_idx, dtype=bool)], axis=1)
+    v = jnp.concatenate([valid, new_valid], axis=1)
+    order = jnp.argsort(d, axis=1, stable=True)[:, :m]
+    return (
+        jnp.take_along_axis(d, order, axis=1),
+        jnp.take_along_axis(i, order, axis=1),
+        jnp.take_along_axis(e, order, axis=1),
+        jnp.take_along_axis(v, order, axis=1),
+    )
+
+
+def _merge_results(res_dist, res_idx, new_dist, new_idx, k):
+    d = jnp.concatenate([res_dist, new_dist], axis=1)
+    i = jnp.concatenate([res_idx, new_idx], axis=1)
+    order = jnp.argsort(d, axis=1, stable=True)[:, :k]
+    return jnp.take_along_axis(d, order, axis=1), jnp.take_along_axis(i, order, axis=1)
+
+
+@register_backend("dense")
+class DenseBackend:
+    """Pure-jnp reference: einsum distances + stable argsort merges."""
+
+    def merge_step(self, cfg, queries, xv, nb, dist_mask, valid,
+                   cand_dist, cand_idx, cand_exp, cand_valid, res_dist, res_idx):
+        m, k = cfg.queue_size, cfg.k
+        dd = _sqdist(queries, xv, cfg.use_pallas)
+        dd = jnp.where(dist_mask, dd, INF)
+
+        cand_dist, cand_idx, cand_exp, cand_valid = _merge_queue(
+            cand_dist, cand_idx, cand_exp, cand_valid,
+            dd, jnp.where(jnp.isfinite(dd), nb, -1), valid, m,
+        )
+
+        res_in_d = jnp.where(valid & jnp.isfinite(dd), dd, INF)
+        res_dist, res_idx = _merge_results(
+            res_dist, res_idx, res_in_d,
+            jnp.where(jnp.isfinite(res_in_d), nb, -1), k,
+        )
+        return cand_dist, cand_idx, cand_exp, cand_valid, res_dist, res_idx
+
+
+# --------------------------------------------------------------------------
+# fused Pallas backend
+# --------------------------------------------------------------------------
+@register_backend("pallas")
+class PallasBackend:
+    """Fused kernel: distances + mask + bitonic queue/result merge, one pass.
+
+    The candidate queue rides through the kernel as (dist, packed payload):
+    node id + expanded/valid flags packed into one int32 so the bitonic
+    network permutes a single value lane (see kernels.topk.pack_payload).
+    """
+
+    def merge_step(self, cfg, queries, xv, nb, dist_mask, valid,
+                   cand_dist, cand_idx, cand_exp, cand_valid, res_dist, res_idx):
+        from repro.kernels import ops as kops
+
+        cand_pay = kops.pack_payload(cand_idx, cand_exp, cand_valid)
+        cand_dist, cand_pay, res_dist, res_idx = kops.fused_traversal_step(
+            queries, xv, nb, dist_mask, valid,
+            cand_dist, cand_pay, res_dist, res_idx,
+        )
+        cand_idx, cand_exp, cand_valid = kops.unpack_payload(cand_pay)
+        return cand_dist, cand_idx, cand_exp, cand_valid, res_dist, res_idx

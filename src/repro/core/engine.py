@@ -1,22 +1,59 @@
-"""SearchEngine — device-resident index + attribute store + traversal facade.
+"""SearchEngine — shard-aware device-resident index + traversal facade.
 
 Bundles the arrays every search needs (vectors, packed attributes, graph,
-entry point) and exposes probe/resume/search entry points used by the E2E
-pipeline, baselines, benchmarks and the serving layer.
+entry point), selects a traversal backend by name, and places everything on
+a 1-D device mesh when more than one accelerator is visible:
+
+  index data (base_vectors / neighbors / attrs)  replicated over the mesh
+  per-query arrays (queries, filters, budgets,
+                    every SearchState buffer)     sharded over the batch axis
+
+The lockstep while_loop contains no cross-lane collectives, so `shard_map`
+over the batch axis runs one independent traversal per device — each shard
+even gets its own trip count (lanes on a finished shard stop paying for
+stragglers elsewhere). Partition specs reuse `distributed.sharding`
+(`batch_spec`), keeping the logical-axis rules in one place.
+
+Probe/resume/search entry points are unchanged from the pre-shard engine:
+the E2E pipeline, baselines, benchmarks and serving only change at the
+constructor (`SearchEngine.build(ds, graph, backend="pallas")`).
 """
 from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.search import SearchConfig, SearchState, init_state, run_search
+from repro.core.search import SearchConfig, SearchState, run_search
+from repro.core.state import init_state  # noqa: F401  (public re-export)
 from repro.data.synthetic import AttributedDataset
+from repro.distributed.sharding import batch_spec
 from repro.filters.predicates import FilterSpec, PRED_RANGE
 from repro.index.graph import GraphIndex
 
 BIG_BUDGET = 1 << 30
+
+BATCH_AXIS = "data"
+
+
+def make_search_mesh(devices=None) -> Mesh | None:
+    """1-D batch mesh over the visible devices; None on a single device."""
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if len(devices) <= 1:
+        return None
+    return Mesh(np.asarray(devices), (BATCH_AXIS,))
+
+
+def _pad_batch(tree, pad: int):
+    """Zero-pad every array leaf along axis 0 (padded lanes self-deactivate
+    on their 0 NDC budget, so the values never influence real lanes)."""
+    if pad == 0:
+        return tree
+    return jax.tree.map(
+        lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1)), tree)
 
 
 @dataclasses.dataclass
@@ -26,16 +63,40 @@ class SearchEngine:
     value_attrs: jnp.ndarray    # [N] f32
     neighbors: jnp.ndarray      # [N, R]
     entry_point: int
+    backend: str | None = None  # None → whatever SearchConfig carries
+    mesh: Mesh | None = None    # None → single-device execution
 
     @classmethod
-    def build(cls, ds: AttributedDataset, graph: GraphIndex) -> "SearchEngine":
-        return cls(
+    def build(cls, ds: AttributedDataset, graph: GraphIndex,
+              backend: str | None = None, mesh: Mesh | str | None = "auto",
+              ) -> "SearchEngine":
+        """Construct a device-resident engine.
+
+        backend  registered TraversalBackend name ("dense" | "pallas"),
+                 used whenever the per-call SearchConfig doesn't set one;
+                 an explicit SearchConfig(backend=...) always wins.
+        mesh     "auto" builds a 1-D batch mesh when >1 device is visible;
+                 pass an explicit Mesh (first axis = batch) or None to
+                 force single-device placement.
+        """
+        if mesh == "auto":
+            mesh = make_search_mesh()
+        eng = cls(
             base_vectors=jnp.asarray(ds.vectors),
             label_attrs=jnp.asarray(ds.labels_packed),
             value_attrs=jnp.asarray(ds.values),
             neighbors=jnp.asarray(graph.neighbors),
             entry_point=graph.entry_point,
+            backend=backend,
+            mesh=mesh,
         )
+        if mesh is not None:
+            rep = NamedSharding(mesh, P())
+            eng.base_vectors = jax.device_put(eng.base_vectors, rep)
+            eng.label_attrs = jax.device_put(eng.label_attrs, rep)
+            eng.value_attrs = jax.device_put(eng.value_attrs, rep)
+            eng.neighbors = jax.device_put(eng.neighbors, rep)
+        return eng
 
     def _attr_args(self, spec: FilterSpec):
         if spec.kind == PRED_RANGE:
@@ -52,12 +113,68 @@ class SearchEngine:
         gt_dist: np.ndarray | None = None,
     ) -> SearchState:
         cfg = dataclasses.replace(cfg, degree=int(self.neighbors.shape[1]))
+        if cfg.backend is None:
+            # engine default applies only when the call doesn't pick one:
+            # an explicit SearchConfig(backend=...) always wins.
+            cfg = dataclasses.replace(cfg, backend=self.backend or "dense")
         attrs, q_attr = self._attr_args(spec)
         q = jnp.asarray(queries, jnp.float32)
         b = q.shape[0]
         budgets = jnp.broadcast_to(jnp.asarray(budgets, jnp.int32), (b,))
         gt = None if gt_dist is None else jnp.asarray(gt_dist, jnp.float32)
-        return run_search(
-            cfg, q, q_attr, self.base_vectors, attrs, self.neighbors,
-            budgets, self.entry_point, state=state, gt_dist=gt,
-        )
+        if self.mesh is None:
+            return run_search(
+                cfg, q, q_attr, self.base_vectors, attrs, self.neighbors,
+                budgets, self.entry_point, state=state, gt_dist=gt,
+            )
+        return self._search_sharded(cfg, q, q_attr, attrs, budgets, state, gt)
+
+    # ---------------------------------------------------------- sharded ----
+    def _search_sharded(self, cfg, q, q_attr, attrs, budgets, state, gt):
+        from jax.experimental.shard_map import shard_map
+
+        mesh = self.mesh
+        ndev = int(np.prod(list(mesh.shape.values())))
+        b = q.shape[0]
+        pad = (-b) % ndev
+        bspec = batch_spec(mesh, b + pad)
+        if bspec == P(None):
+            # explicit mesh whose axis names the sharding rule table doesn't
+            # know — shard over the first axis rather than silently
+            # replicating the whole batch on every device. (b + pad is a
+            # multiple of ndev, hence of the first-axis size.)
+            bspec = P(mesh.axis_names[0])
+        rep = P()
+
+        q = _pad_batch(q, pad)
+        q_attr = _pad_batch(q_attr, pad)
+        budgets = _pad_batch(budgets, pad)  # 0-budget lanes stop immediately
+        state = None if state is None else _pad_batch(state, pad)
+        gt = None if gt is None else _pad_batch(gt, pad)
+
+        args = [q, q_attr, self.base_vectors, attrs, self.neighbors, budgets]
+        specs = [bspec, bspec, rep, rep, rep, bspec]
+        has_state, has_gt = state is not None, gt is not None
+        if has_state:
+            args.append(state)
+            specs.append(bspec)
+        if has_gt:
+            args.append(gt)
+            specs.append(bspec)
+
+        entry = self.entry_point
+
+        def fn(*a):
+            qq, qa, base, at, nb, bud = a[:6]
+            st = a[6] if has_state else None
+            g = a[6 + has_state] if has_gt else None
+            return run_search(cfg, qq, qa, base, at, nb, bud, entry,
+                              state=st, gt_dist=g)
+
+        out = shard_map(
+            fn, mesh=mesh, in_specs=tuple(specs), out_specs=bspec,
+            check_rep=False,
+        )(*args)
+        if pad:
+            out = jax.tree.map(lambda a: a[:b], out)
+        return out

@@ -14,7 +14,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.search import SearchState
+from repro.core.state import SearchState
 
 FEATURE_NAMES: tuple[str, ...] = (
     # --- Global (LAET†) ---

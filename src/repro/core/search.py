@@ -1,307 +1,48 @@
-"""Batched lockstep filtered beam search over a fixed-degree proximity graph.
+"""Batched lockstep filtered beam search — facade over the traversal stack.
 
 This is the TPU-native adaptation of the paper's Algorithm 1 (PostFiltering
 Early-Termination Search). A batch of B queries traverses the graph in
 lockstep inside one `jax.lax.while_loop`; per-lane `active` masks realize
 per-query adaptive termination (the E2E mechanism) without breaking SPMD.
 
-Key structures (all static shapes):
-  candidate queue   sorted ascending [B, M]  (dist, idx, expanded, valid)
-  result set        sorted ascending [B, K]  (valid nodes only)
-  visited set       packed bitset    [B, ceil(N/32)] uint32
-  counters          cnt (NDC), n_inspected, n_valid_visited, n_pop_valid, hops
+The implementation is layered (see docs/ARCHITECTURE.md):
 
-The engine is *resumable*: `run_search` consumes and returns a `SearchState`,
-so the paper's zero-overhead early probe is literally the same loop run with
-budget=f, whose carry then seeds the adaptive-termination phase (budget=Ŵ_q).
+  repro.core.state     SearchConfig / SearchState, init + resume logic
+  repro.core.step      backend-agnostic per-step bookkeeping (pop, visited
+                       bitset, predicate, counters, convergence tracking)
+  repro.core.backends  pluggable TraversalBackend hot paths — "dense"
+                       (jnp reference) and "pallas" (fused kernel); selected
+                       statically via SearchConfig.backend
+  repro.core.engine    shard-aware SearchEngine facade over device meshes
 
-Two traversal modes (static):
-  post  PostFiltering (paper §2.2): all new nodes get distances (NDC) and
-        enter the queue; only predicate-valid nodes enter the result set.
-  pre   PreFiltering / ACORN-γ (paper §A.3): neighbors (1-hop ∪ strided
-        2-hop) are *inspected* first; distances are computed only for valid
-        nodes, and only those enter the queue. NDC counts valid only;
-        ρ_visited = valid/inspected carries the cost signal.
+`run_search` here stitches those layers into the jitted while_loop and is
+*resumable*: it consumes and returns a `SearchState`, so the paper's
+zero-overhead early probe is literally the same loop run with budget=f,
+whose carry then seeds the adaptive-termination phase (budget=Ŵ_q).
 """
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.filters.predicates import PRED_CONTAIN, PRED_EQUAL, PRED_RANGE
-
-INF = jnp.float32(jnp.inf)
-
-
-@dataclasses.dataclass(frozen=True)
-class SearchConfig:
-    k: int = 10                # result set size
-    queue_size: int = 128      # M — beam width / ef analogue
-    degree: int = 32           # graph out-degree R (static)
-    pred_kind: int = PRED_CONTAIN
-    mode: str = "post"         # "post" | "pre"
-    two_hop_stride: int = 8    # pre mode: sample every s-th 2-hop neighbor
-    max_steps: int = 100000
-    greedy_stop: bool = False  # optional: stop when best cand > worst result
-    use_pallas: bool = False   # route distance eval through the Pallas kernel
-
-
-class SearchState(NamedTuple):
-    cand_dist: jax.Array       # [B, M] f32 sorted ascending, inf padded
-    cand_idx: jax.Array        # [B, M] i32, -1 padded
-    cand_exp: jax.Array        # [B, M] bool — already expanded
-    cand_valid: jax.Array      # [B, M] bool — predicate validity
-    res_dist: jax.Array        # [B, K] f32 sorted ascending, inf padded
-    res_idx: jax.Array         # [B, K] i32, -1 padded
-    visited: jax.Array         # [B, NW] u32 bitset
-    cnt: jax.Array             # [B] i32 — NDC (paper's W_q unit)
-    n_inspected: jax.Array     # [B] i32 — predicate evaluations
-    n_valid_visited: jax.Array # [B] i32 — valid among inspected
-    n_pop_valid: jax.Array     # [B] i32 — valid among popped/expanded
-    hops: jax.Array            # [B] i32 — expansions (search hops)
-    active: jax.Array          # [B] bool
-    d_start: jax.Array         # [B] f32 — entry-point distance (feature)
-    conv_cnt: jax.Array        # [B] i32 — NDC at first full-recall, -1 if not yet
-    res_full_cnt: jax.Array    # [B] i32 — NDC when the k-th valid was found, -1 if not yet
-
-
-def _sqdist(q: jax.Array, x: jax.Array, use_pallas: bool) -> jax.Array:
-    """q[B,d], x[B,R,d] -> [B,R] squared L2."""
-    if use_pallas:
-        from repro.kernels import ops as kops
-
-        return kops.batched_sqdist(q, x)
-    qn = jnp.sum(q * q, axis=-1)[:, None]
-    xn = jnp.sum(x * x, axis=-1)
-    qx = jnp.einsum("bd,brd->br", q, x)
-    return jnp.maximum(qn + xn - 2.0 * qx, 0.0)
-
-
-def _predicate(kind: int, attrs, q_attr, nb_safe):
-    """Gather node attributes for nb [B,R] and evaluate the filter."""
-    if kind == PRED_RANGE:
-        vals = attrs[nb_safe]  # [B, R]
-        lo, hi = q_attr
-        return (vals >= lo[:, None]) & (vals <= hi[:, None])
-    masks = attrs[nb_safe]  # [B, R, W]
-    qm = q_attr[:, None, :]
-    if kind == PRED_CONTAIN:
-        return jnp.all((masks & qm) == qm, axis=-1)
-    if kind == PRED_EQUAL:
-        return jnp.all(masks == qm, axis=-1)
-    raise ValueError(kind)
-
-
-def _merge_queue(dist, idx, exp, valid, new_dist, new_idx, new_valid, m):
-    """Merge sorted [B,M] buffers with new [B,R] entries; keep best M."""
-    d = jnp.concatenate([dist, new_dist], axis=1)
-    i = jnp.concatenate([idx, new_idx], axis=1)
-    e = jnp.concatenate([exp, jnp.zeros_like(new_idx, dtype=bool)], axis=1)
-    v = jnp.concatenate([valid, new_valid], axis=1)
-    order = jnp.argsort(d, axis=1, stable=True)[:, :m]
-    return (
-        jnp.take_along_axis(d, order, axis=1),
-        jnp.take_along_axis(i, order, axis=1),
-        jnp.take_along_axis(e, order, axis=1),
-        jnp.take_along_axis(v, order, axis=1),
-    )
-
-
-def _merge_results(res_dist, res_idx, new_dist, new_idx, k):
-    d = jnp.concatenate([res_dist, new_dist], axis=1)
-    i = jnp.concatenate([res_idx, new_idx], axis=1)
-    order = jnp.argsort(d, axis=1, stable=True)[:, :k]
-    return jnp.take_along_axis(d, order, axis=1), jnp.take_along_axis(i, order, axis=1)
-
-
-def init_state(
-    cfg: SearchConfig,
-    queries: jax.Array,      # [B, d]
-    q_attr,                  # [B, W] masks or (lo[B], hi[B])
-    base_vectors: jax.Array, # [N, d]
-    attrs,                   # [N, W] u32 or [N] f32
-    entry_point: int,
-    gt_dist: jax.Array | None = None,  # [B, K] for convergence tracking
-) -> SearchState:
-    b = queries.shape[0]
-    n = base_vectors.shape[0]
-    nw = (n + 31) // 32
-    m, k = cfg.queue_size, cfg.k
-
-    ep = jnp.full((b, 1), entry_point, dtype=jnp.int32)
-    d0 = _sqdist(queries, base_vectors[ep], cfg.use_pallas)  # [B,1]
-    val0 = _predicate(cfg.pred_kind, attrs, q_attr, ep)      # [B,1]
-
-    cand_dist = jnp.full((b, m), INF).at[:, :1].set(d0)
-    cand_idx = jnp.full((b, m), -1, dtype=jnp.int32).at[:, :1].set(ep)
-    cand_exp = jnp.zeros((b, m), dtype=bool)
-    cand_valid = jnp.zeros((b, m), dtype=bool).at[:, :1].set(val0)
-
-    res_dist = jnp.full((b, k), INF)
-    res_idx = jnp.full((b, k), -1, dtype=jnp.int32)
-    res_dist = res_dist.at[:, 0].set(jnp.where(val0[:, 0], d0[:, 0], INF))
-    res_idx = res_idx.at[:, 0].set(jnp.where(val0[:, 0], ep[:, 0], -1))
-
-    visited = jnp.zeros((b, nw), dtype=jnp.uint32)
-    word = entry_point // 32
-    bit = jnp.uint32(1) << jnp.uint32(entry_point % 32)
-    visited = visited.at[:, word].set(bit)
-
-    ndc0 = jnp.ones((b,), jnp.int32)  # entry distance is computed in both modes
-    return SearchState(
-        cand_dist=cand_dist,
-        cand_idx=cand_idx,
-        cand_exp=cand_exp,
-        cand_valid=cand_valid,
-        res_dist=res_dist,
-        res_idx=res_idx,
-        visited=visited,
-        cnt=ndc0,
-        n_inspected=jnp.ones((b,), jnp.int32),
-        n_valid_visited=val0[:, 0].astype(jnp.int32),
-        n_pop_valid=jnp.zeros((b,), jnp.int32),
-        hops=jnp.zeros((b,), jnp.int32),
-        active=jnp.ones((b,), bool),
-        d_start=d0[:, 0],
-        conv_cnt=jnp.full((b,), -1, jnp.int32),
-        res_full_cnt=jnp.where(val0[:, 0] & (k == 1), 1, -1).astype(jnp.int32),
-    )
-
-
-def _make_step(cfg: SearchConfig, queries, q_attr, base_vectors, attrs, neighbors,
-               budgets, gt_dist):
-    """Build the while_loop body closed over static data and per-lane budgets."""
-    b = queries.shape[0]
-    m, k, r = cfg.queue_size, cfg.k, cfg.degree
-    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
-
-    def step(state: SearchState) -> SearchState:
-        # ---- pop best unexpanded candidate per lane ----
-        unexp = (~state.cand_exp) & (state.cand_idx >= 0)
-        pop_key = jnp.where(unexp, state.cand_dist, INF)
-        p = jnp.argmin(pop_key, axis=1)                      # [B]
-        best_d = jnp.take_along_axis(pop_key, p[:, None], axis=1)[:, 0]
-        has_cand = jnp.isfinite(best_d)
-        u = jnp.take_along_axis(state.cand_idx, p[:, None], axis=1)[:, 0]
-        u_valid = jnp.take_along_axis(state.cand_valid, p[:, None], axis=1)[:, 0]
-
-        stop_budget = state.cnt >= budgets
-        act = state.active & has_cand & (~stop_budget)
-        if cfg.greedy_stop:
-            worst_res = state.res_dist[:, -1]
-            act = act & ~(jnp.isfinite(worst_res) & (best_d > worst_res))
-
-        # ---- mark popped slot expanded ----
-        exp_new = state.cand_exp.at[rows[:, 0], p].set(True)
-        cand_exp = jnp.where(act[:, None], exp_new, state.cand_exp)
-
-        # ---- gather neighbor lists ----
-        u_safe = jnp.maximum(u, 0)
-        nb = neighbors[u_safe]                               # [B, R]
-        if cfg.mode == "pre":
-            hop2 = neighbors[jnp.maximum(nb, 0)]             # [B, R, R]
-            hop2 = hop2[:, :, :: cfg.two_hop_stride].reshape(b, -1)
-            hop2 = jnp.where(jnp.repeat(nb >= 0, hop2.shape[1] // r, axis=1), hop2, -1)
-            nb = jnp.concatenate([nb, hop2], axis=1)
-            # intra-step dedup (2-hop lists may repeat 1-hop entries)
-            order = jnp.argsort(nb, axis=1, stable=True)
-            s = jnp.take_along_axis(nb, order, axis=1)
-            dup_sorted = jnp.concatenate(
-                [jnp.zeros((b, 1), bool), s[:, 1:] == s[:, :-1]], axis=1
-            )
-            inv = jnp.argsort(order, axis=1, stable=True)
-            dup = jnp.take_along_axis(dup_sorted, inv, axis=1)
-            nb = jnp.where(dup, -1, nb)
-        nb_ok = (nb >= 0) & act[:, None]
-        nb_safe = jnp.maximum(nb, 0)
-
-        # ---- visited-set test (packed bitset) ----
-        word_idx = nb_safe >> 5
-        bit = jnp.uint32(1) << (nb_safe & 31).astype(jnp.uint32)
-        words = jnp.take_along_axis(state.visited, word_idx, axis=1)
-        seen = (words & bit) != 0
-        is_new = nb_ok & (~seen)
-
-        # ---- predicate on inspected nodes ----
-        valid = _predicate(cfg.pred_kind, attrs, q_attr, nb_safe) & is_new
-
-        # ---- distances ----
-        if cfg.mode == "pre":
-            dist_mask = valid           # ACORN: distances only for valid nodes
-        else:
-            dist_mask = is_new          # PostFiltering: distances for all new
-        xv = base_vectors[nb_safe]                            # [B, R', d]
-        dd = _sqdist(queries, xv, cfg.use_pallas)
-        dd = jnp.where(dist_mask, dd, INF)
-
-        # ---- visited bits: set for every inspected-new node ----
-        scat_w = jnp.where(is_new, word_idx, b * 0 - 1)       # -1 dropped
-        scat_b = jnp.where(is_new, bit, jnp.uint32(0))
-        visited = state.visited.at[rows, scat_w].add(scat_b, mode="drop")
-
-        # ---- queue merge (post: all new; pre: valid only, via inf dist) ----
-        cand_dist, cand_idx, cand_exp2, cand_valid = _merge_queue(
-            state.cand_dist, state.cand_idx, cand_exp, state.cand_valid,
-            dd, jnp.where(jnp.isfinite(dd), nb, -1), valid, m,
-        )
-
-        # ---- result merge (valid only) ----
-        res_in_d = jnp.where(valid & jnp.isfinite(dd), dd, INF)
-        res_dist, res_idx = _merge_results(
-            state.res_dist, state.res_idx, res_in_d,
-            jnp.where(jnp.isfinite(res_in_d), nb, -1), k,
-        )
-
-        # ---- counters ----
-        ndc_add = dist_mask.sum(axis=1).astype(jnp.int32)
-        insp_add = is_new.sum(axis=1).astype(jnp.int32)
-        valid_add = valid.sum(axis=1).astype(jnp.int32)
-        cnt = state.cnt + jnp.where(act, ndc_add, 0)
-        n_inspected = state.n_inspected + jnp.where(act, insp_add, 0)
-        n_valid_visited = state.n_valid_visited + jnp.where(act, valid_add, 0)
-        n_pop_valid = state.n_pop_valid + jnp.where(act & u_valid, 1, 0)
-        hops = state.hops + jnp.where(act, 1, 0)
-
-        # ---- convergence tracking for W_q ground truth ----
-        if gt_dist is not None:
-            covered = jnp.all(res_dist <= gt_dist + 1e-6, axis=1)
-            first = (state.conv_cnt < 0) & covered
-            conv_cnt = jnp.where(first, cnt, state.conv_cnt)
-        else:
-            conv_cnt = state.conv_cnt
-
-        # ---- NDC at which the result set filled (feature) ----
-        now_full = jnp.isfinite(res_dist[:, -1]) & act
-        first_full = (state.res_full_cnt < 0) & now_full
-        res_full_cnt = jnp.where(first_full, cnt, state.res_full_cnt)
-
-        # ---- lane masking: inactive lanes keep their old arrays ----
-        am = act[:, None]
-        return SearchState(
-            cand_dist=jnp.where(am, cand_dist, state.cand_dist),
-            cand_idx=jnp.where(am, cand_idx, state.cand_idx),
-            cand_exp=jnp.where(am, cand_exp2, cand_exp),
-            cand_valid=jnp.where(am, cand_valid, state.cand_valid),
-            res_dist=jnp.where(am, res_dist, state.res_dist),
-            res_idx=jnp.where(am, res_idx, state.res_idx),
-            visited=jnp.where(am, visited, state.visited),
-            cnt=cnt,
-            n_inspected=n_inspected,
-            n_valid_visited=n_valid_visited,
-            n_pop_valid=n_pop_valid,
-            hops=hops,
-            active=act,
-            d_start=state.d_start,
-            conv_cnt=conv_cnt,
-            res_full_cnt=res_full_cnt,
-        )
-
-    return step
+# Re-exports: the public surface predates the layering and stays stable.
+from repro.core.backends import (  # noqa: F401
+    TraversalBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
+from repro.core.state import (  # noqa: F401
+    INF,
+    SearchConfig,
+    SearchState,
+    init_state,
+    prepare_resume,
+    topk_results,
+)
+from repro.core.step import make_step
 
 
 @functools.partial(
@@ -325,17 +66,18 @@ def run_search(
     Termination per lane: queue exhausted, NDC ≥ budget, or (optional)
     greedy result-bound stop. Resuming with a larger budget continues
     exactly where the previous phase stopped — the paper's zero-overhead
-    probe reuse.
+    probe reuse. The traversal backend is resolved statically from
+    `cfg.backend`, so dense and Pallas hot paths share this loop verbatim.
     """
+    backend = get_backend(cfg.backend or "dense")
     if state is None:
         state = init_state(cfg, queries, q_attr, base_vectors, attrs, entry_point,
                            gt_dist)
     else:
-        # reactivate lanes that stopped purely on budget
-        state = state._replace(active=jnp.ones_like(state.active))
+        state = prepare_resume(state)
 
-    step = _make_step(cfg, queries, q_attr, base_vectors, attrs, neighbors,
-                      budgets, gt_dist)
+    step = make_step(cfg, backend, queries, q_attr, base_vectors, attrs,
+                     neighbors, budgets, gt_dist)
 
     def cond(carry):
         state, it = carry
@@ -347,8 +89,3 @@ def run_search(
 
     state, _ = jax.lax.while_loop(cond, body, (state, jnp.int32(0)))
     return state
-
-
-def topk_results(state: SearchState) -> tuple[np.ndarray, np.ndarray]:
-    """Host-side (idx, dist) of the result set."""
-    return np.asarray(state.res_idx), np.asarray(state.res_dist)

@@ -1,0 +1,128 @@
+"""Search-state layer: configuration, the lockstep carry, init and resume.
+
+This is the bottom of the traversal stack (state → step → backend → engine).
+Everything here is backend-agnostic: the same `SearchState` flows through the
+dense-jnp reference backend and the fused Pallas backend, which is what makes
+the paper's zero-overhead probe (run with budget=f, resume the carry with
+budget=Ŵ_q) a property of the *state*, not of any particular kernel.
+
+Key structures (all static shapes):
+  candidate queue   sorted ascending [B, M]  (dist, idx, expanded, valid)
+  result set        sorted ascending [B, K]  (valid nodes only)
+  visited set       packed bitset    [B, ceil(N/32)] uint32
+  counters          cnt (NDC), n_inspected, n_valid_visited, n_pop_valid, hops
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.filters.predicates import PRED_CONTAIN
+
+INF = jnp.float32(jnp.inf)
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchConfig:
+    k: int = 10                # result set size
+    queue_size: int = 128      # M — beam width / ef analogue
+    degree: int = 32           # graph out-degree R (static)
+    pred_kind: int = PRED_CONTAIN
+    mode: str = "post"         # "post" | "pre"
+    two_hop_stride: int = 8    # pre mode: sample every s-th 2-hop neighbor
+    max_steps: int = 100000
+    greedy_stop: bool = False  # optional: stop when best cand > worst result
+    backend: str | None = None # TraversalBackend name; None → inherit the
+                               # engine default (or "dense" standalone)
+    use_pallas: bool = False   # dense backend: route distances through Pallas
+
+
+class SearchState(NamedTuple):
+    cand_dist: jax.Array       # [B, M] f32 sorted ascending, inf padded
+    cand_idx: jax.Array        # [B, M] i32, -1 padded
+    cand_exp: jax.Array        # [B, M] bool — already expanded
+    cand_valid: jax.Array      # [B, M] bool — predicate validity
+    res_dist: jax.Array        # [B, K] f32 sorted ascending, inf padded
+    res_idx: jax.Array         # [B, K] i32, -1 padded
+    visited: jax.Array         # [B, NW] u32 bitset
+    cnt: jax.Array             # [B] i32 — NDC (paper's W_q unit)
+    n_inspected: jax.Array     # [B] i32 — predicate evaluations
+    n_valid_visited: jax.Array # [B] i32 — valid among inspected
+    n_pop_valid: jax.Array     # [B] i32 — valid among popped/expanded
+    hops: jax.Array            # [B] i32 — expansions (search hops)
+    active: jax.Array          # [B] bool
+    d_start: jax.Array         # [B] f32 — entry-point distance (feature)
+    conv_cnt: jax.Array        # [B] i32 — NDC at first full-recall, -1 if not yet
+    res_full_cnt: jax.Array    # [B] i32 — NDC when the k-th valid was found, -1 if not yet
+
+
+def init_state(
+    cfg: SearchConfig,
+    queries: jax.Array,      # [B, d]
+    q_attr,                  # [B, W] masks or (lo[B], hi[B])
+    base_vectors: jax.Array, # [N, d]
+    attrs,                   # [N, W] u32 or [N] f32
+    entry_point: int,
+    gt_dist: jax.Array | None = None,  # [B, K] for convergence tracking
+) -> SearchState:
+    from repro.core.step import evaluate_gathered_predicate
+    from repro.kernels.distance import sqdist_bdrd
+
+    del gt_dist  # tracked by the step fn; accepted for signature stability
+    b = queries.shape[0]
+    n = base_vectors.shape[0]
+    nw = (n + 31) // 32
+    m, k = cfg.queue_size, cfg.k
+
+    ep = jnp.full((b, 1), entry_point, dtype=jnp.int32)
+    d0 = sqdist_bdrd(queries, base_vectors[ep])              # [B,1]
+    val0 = evaluate_gathered_predicate(cfg.pred_kind, attrs, q_attr, ep)
+
+    cand_dist = jnp.full((b, m), INF).at[:, :1].set(d0)
+    cand_idx = jnp.full((b, m), -1, dtype=jnp.int32).at[:, :1].set(ep)
+    cand_exp = jnp.zeros((b, m), dtype=bool)
+    cand_valid = jnp.zeros((b, m), dtype=bool).at[:, :1].set(val0)
+
+    res_dist = jnp.full((b, k), INF)
+    res_idx = jnp.full((b, k), -1, dtype=jnp.int32)
+    res_dist = res_dist.at[:, 0].set(jnp.where(val0[:, 0], d0[:, 0], INF))
+    res_idx = res_idx.at[:, 0].set(jnp.where(val0[:, 0], ep[:, 0], -1))
+
+    visited = jnp.zeros((b, nw), dtype=jnp.uint32)
+    word = entry_point // 32
+    bit = jnp.uint32(1) << jnp.uint32(entry_point % 32)
+    visited = visited.at[:, word].set(bit)
+
+    ndc0 = jnp.ones((b,), jnp.int32)  # entry distance is computed in both modes
+    return SearchState(
+        cand_dist=cand_dist,
+        cand_idx=cand_idx,
+        cand_exp=cand_exp,
+        cand_valid=cand_valid,
+        res_dist=res_dist,
+        res_idx=res_idx,
+        visited=visited,
+        cnt=ndc0,
+        n_inspected=jnp.ones((b,), jnp.int32),
+        n_valid_visited=val0[:, 0].astype(jnp.int32),
+        n_pop_valid=jnp.zeros((b,), jnp.int32),
+        hops=jnp.zeros((b,), jnp.int32),
+        active=jnp.ones((b,), bool),
+        d_start=d0[:, 0],
+        conv_cnt=jnp.full((b,), -1, jnp.int32),
+        res_full_cnt=jnp.where(val0[:, 0] & (k == 1), 1, -1).astype(jnp.int32),
+    )
+
+
+def prepare_resume(state: SearchState) -> SearchState:
+    """Reactivate lanes that stopped purely on budget (probe → resume)."""
+    return state._replace(active=jnp.ones_like(state.active))
+
+
+def topk_results(state: SearchState) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side (idx, dist) of the result set."""
+    return np.asarray(state.res_idx), np.asarray(state.res_dist)

@@ -1,0 +1,163 @@
+"""Traversal-step layer: the backend-agnostic per-step logic.
+
+One lockstep step = pop → gather frontier → visited test → predicate →
+(backend: distances + queue/result merge) → counters. Everything except the
+backend call is pure bookkeeping shared by all traversal backends, so a
+backend only has to implement the arithmetic hot path (distance evaluation
+and the two sorted-buffer merges) — see `repro.core.backends`.
+
+Two traversal modes (static):
+  post  PostFiltering (paper §2.2): all new nodes get distances (NDC) and
+        enter the queue; only predicate-valid nodes enter the result set.
+  pre   PreFiltering / ACORN-γ (paper §A.3): neighbors (1-hop ∪ strided
+        2-hop) are *inspected* first; distances are computed only for valid
+        nodes, and only those enter the queue. NDC counts valid only;
+        ρ_visited = valid/inspected carries the cost signal.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.state import INF, SearchConfig, SearchState
+from repro.filters.predicates import evaluate_predicate
+
+
+def evaluate_gathered_predicate(kind: int, attrs, q_attr, nb_safe):
+    """Gather node attributes for nb [B, R'] and evaluate the filter."""
+    return evaluate_predicate(kind, attrs[nb_safe], q_attr)
+
+
+def gather_frontier(cfg: SearchConfig, neighbors, u_safe):
+    """Neighbor ids to inspect for popped nodes u_safe [B].
+
+    post: the 1-hop list [B, R]. pre: 1-hop ∪ strided 2-hop with intra-step
+    dedup (2-hop lists may repeat 1-hop entries), ACORN-γ style.
+    """
+    b = u_safe.shape[0]
+    r = cfg.degree
+    nb = neighbors[u_safe]                                   # [B, R]
+    if cfg.mode == "pre":
+        hop2 = neighbors[jnp.maximum(nb, 0)]                 # [B, R, R]
+        hop2 = hop2[:, :, :: cfg.two_hop_stride].reshape(b, -1)
+        hop2 = jnp.where(jnp.repeat(nb >= 0, hop2.shape[1] // r, axis=1), hop2, -1)
+        nb = jnp.concatenate([nb, hop2], axis=1)
+        order = jnp.argsort(nb, axis=1, stable=True)
+        s = jnp.take_along_axis(nb, order, axis=1)
+        dup_sorted = jnp.concatenate(
+            [jnp.zeros((b, 1), bool), s[:, 1:] == s[:, :-1]], axis=1
+        )
+        inv = jnp.argsort(order, axis=1, stable=True)
+        dup = jnp.take_along_axis(dup_sorted, inv, axis=1)
+        nb = jnp.where(dup, -1, nb)
+    return nb
+
+
+def make_step(cfg: SearchConfig, backend, queries, q_attr, base_vectors, attrs,
+              neighbors, budgets, gt_dist):
+    """Build the while_loop body closed over static data and per-lane budgets.
+
+    `backend` is a `TraversalBackend`: it receives the gathered neighbor
+    vectors plus the current sorted buffers and returns the merged buffers.
+    """
+    b = queries.shape[0]
+    rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+
+    def step(state: SearchState) -> SearchState:
+        # ---- pop best unexpanded candidate per lane ----
+        unexp = (~state.cand_exp) & (state.cand_idx >= 0)
+        pop_key = jnp.where(unexp, state.cand_dist, INF)
+        p = jnp.argmin(pop_key, axis=1)                      # [B]
+        best_d = jnp.take_along_axis(pop_key, p[:, None], axis=1)[:, 0]
+        has_cand = jnp.isfinite(best_d)
+        u = jnp.take_along_axis(state.cand_idx, p[:, None], axis=1)[:, 0]
+        u_valid = jnp.take_along_axis(state.cand_valid, p[:, None], axis=1)[:, 0]
+
+        stop_budget = state.cnt >= budgets
+        act = state.active & has_cand & (~stop_budget)
+        if cfg.greedy_stop:
+            worst_res = state.res_dist[:, -1]
+            act = act & ~(jnp.isfinite(worst_res) & (best_d > worst_res))
+
+        # ---- mark popped slot expanded ----
+        exp_new = state.cand_exp.at[rows[:, 0], p].set(True)
+        cand_exp = jnp.where(act[:, None], exp_new, state.cand_exp)
+
+        # ---- gather frontier neighbor ids ----
+        nb = gather_frontier(cfg, neighbors, jnp.maximum(u, 0))
+        nb_ok = (nb >= 0) & act[:, None]
+        nb_safe = jnp.maximum(nb, 0)
+
+        # ---- visited-set test (packed bitset) ----
+        word_idx = nb_safe >> 5
+        bit = jnp.uint32(1) << (nb_safe & 31).astype(jnp.uint32)
+        words = jnp.take_along_axis(state.visited, word_idx, axis=1)
+        seen = (words & bit) != 0
+        is_new = nb_ok & (~seen)
+
+        # ---- predicate on inspected nodes ----
+        valid = evaluate_gathered_predicate(cfg.pred_kind, attrs, q_attr, nb_safe)
+        valid = valid & is_new
+
+        # ---- distance mask (post: all new get NDC; pre: valid only) ----
+        dist_mask = valid if cfg.mode == "pre" else is_new
+
+        # ---- visited bits: set for every inspected-new node ----
+        scat_w = jnp.where(is_new, word_idx, -1)              # -1 dropped
+        scat_b = jnp.where(is_new, bit, jnp.uint32(0))
+        visited = state.visited.at[rows, scat_w].add(scat_b, mode="drop")
+
+        # ---- backend hot path: distances + queue/result merges ----
+        xv = base_vectors[nb_safe]                            # [B, R', d]
+        cand_dist, cand_idx, cand_exp2, cand_valid, res_dist, res_idx = (
+            backend.merge_step(
+                cfg, queries, xv, nb, dist_mask, valid,
+                state.cand_dist, state.cand_idx, cand_exp, state.cand_valid,
+                state.res_dist, state.res_idx,
+            )
+        )
+
+        # ---- counters ----
+        ndc_add = dist_mask.sum(axis=1).astype(jnp.int32)
+        insp_add = is_new.sum(axis=1).astype(jnp.int32)
+        valid_add = valid.sum(axis=1).astype(jnp.int32)
+        cnt = state.cnt + jnp.where(act, ndc_add, 0)
+        n_inspected = state.n_inspected + jnp.where(act, insp_add, 0)
+        n_valid_visited = state.n_valid_visited + jnp.where(act, valid_add, 0)
+        n_pop_valid = state.n_pop_valid + jnp.where(act & u_valid, 1, 0)
+        hops = state.hops + jnp.where(act, 1, 0)
+
+        # ---- convergence tracking for W_q ground truth ----
+        if gt_dist is not None:
+            covered = jnp.all(res_dist <= gt_dist + 1e-6, axis=1)
+            first = (state.conv_cnt < 0) & covered
+            conv_cnt = jnp.where(first, cnt, state.conv_cnt)
+        else:
+            conv_cnt = state.conv_cnt
+
+        # ---- NDC at which the result set filled (feature) ----
+        now_full = jnp.isfinite(res_dist[:, -1]) & act
+        first_full = (state.res_full_cnt < 0) & now_full
+        res_full_cnt = jnp.where(first_full, cnt, state.res_full_cnt)
+
+        # ---- lane masking: inactive lanes keep their old arrays ----
+        am = act[:, None]
+        return SearchState(
+            cand_dist=jnp.where(am, cand_dist, state.cand_dist),
+            cand_idx=jnp.where(am, cand_idx, state.cand_idx),
+            cand_exp=jnp.where(am, cand_exp2, cand_exp),
+            cand_valid=jnp.where(am, cand_valid, state.cand_valid),
+            res_dist=jnp.where(am, res_dist, state.res_dist),
+            res_idx=jnp.where(am, res_idx, state.res_idx),
+            visited=jnp.where(am, visited, state.visited),
+            cnt=cnt,
+            n_inspected=n_inspected,
+            n_valid_visited=n_valid_visited,
+            n_pop_valid=n_pop_valid,
+            hops=hops,
+            active=act,
+            d_start=state.d_start,
+            conv_cnt=conv_cnt,
+            res_full_cnt=res_full_cnt,
+        )
+
+    return step

@@ -82,7 +82,9 @@ def spec_for(mesh: Mesh, shape, logical_axes, rules: ShardingRules = DEFAULT_RUL
                 continue
             if dim % _axis_size(mesh, cand) != 0:
                 continue
-            placed = cand
+            # singleton tuples denote the same sharding as the bare axis name
+            # but PartitionSpec(('data',)) != PartitionSpec('data') — unwrap.
+            placed = cand[0] if isinstance(cand, tuple) and len(cand) == 1 else cand
             used.update(axes)
             break
         out.append(placed)
@@ -112,6 +114,8 @@ def batch_spec(mesh: Mesh, global_batch: int,
         if any(a not in mesh.shape for a in axes):
             continue
         if global_batch % _axis_size(mesh, cand) == 0:
+            if isinstance(cand, tuple) and len(cand) == 1:
+                cand = cand[0]
             return PartitionSpec(cand)
     return PartitionSpec(None)
 

@@ -22,6 +22,22 @@ from jax.experimental import pallas as pl
 INF = float("inf")
 
 
+def sqdist_bdrd(q, x):
+    """Pure-jnp squared L2: q [B,d], x [B,R,d] -> [B,R], clamped >= 0.
+
+    The single source of the distance expression — the engine's init path,
+    the dense backend, and the fused kernel's host path all call this so a
+    numerics tweak can never desynchronize them (backend parity depends on
+    bitwise-identical distances).
+    """
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    qn = jnp.sum(q * q, axis=-1)[:, None]
+    xn = jnp.sum(x * x, axis=-1)
+    qx = jnp.einsum("bd,brd->br", q, x)
+    return jnp.maximum(qn + xn - 2.0 * qx, 0.0)
+
+
 def _sqdist_kernel(q_ref, x_ref, mask_ref, o_ref):
     q = q_ref[...].astype(jnp.float32)          # [bB, d]
     x = x_ref[...].astype(jnp.float32)          # [bB, R, d]

@@ -1,0 +1,165 @@
+"""Pallas TPU kernel: fused traversal step (distance + mask + dual merge).
+
+One lockstep traversal step turns R gathered neighbor vectors into updated
+candidate-queue and result-set buffers. Executed as separate ops that is:
+a [B,R] distance batch, a [B,M+R] argsort, a [B,K+R] argsort, and six
+take_along_axis gathers — every intermediate bouncing through HBM.
+
+This kernel fuses the whole step for a block of lanes in one VMEM pass:
+
+  1. squared-L2 distances q·x via the MXU (dot_general, f32 accumulate)
+  2. filter/visited mask application (masked entries emit +inf)
+  3. candidate-queue merge: bitonic top-M over width next_pow2(M+R)
+  4. result-set merge: bitonic top-K over width next_pow2(K+R)
+
+Payloads ride as packed int32 (node id + expanded/valid flags, see
+kernels.topk.pack_payload) so the sorting network permutes one value lane.
+Replaces the per-step argsort pair of the dense reference backend; wired in
+as `SearchConfig(backend="pallas")` via repro.core.backends.
+
+VMEM per block ≈ bB·(R·d + 2·next_pow2(M+R) + 2·next_pow2(K+R))·4 B; for
+bB=8, R=64, d=1024, M=512 that's ~2.2 MB — comfortable on a 16 MB core.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.distance import sqdist_bdrd
+from repro.kernels.topk import bitonic_merge_sorted, merge_topm, sort_kv_f32
+
+INF = float("inf")
+
+
+def _fused_step_kernel(q_ref, x_ref, nb_ref, dmask_ref, vmask_ref,
+                       cd_ref, cp_ref, rd_ref, ri_ref,
+                       ocd_ref, ocp_ref, ord_ref, ori_ref,
+                       *, m, k, wq, wr):
+    q = q_ref[...].astype(jnp.float32)          # [bB, d]
+    x = x_ref[...].astype(jnp.float32)          # [bB, R, d]
+    dmask = dmask_ref[...]                      # [bB, R]
+    valid = vmask_ref[...]                      # [bB, R]
+    nb = nb_ref[...]                            # [bB, R]
+
+    # ---- 1. distances (per-lane MXU contraction) ----
+    qn = jnp.sum(q * q, axis=-1)[:, None]
+    xn = jnp.sum(x * x, axis=-1)
+    qx = jax.lax.dot_general(
+        q[:, None, :], x,
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )[:, 0, :]
+    d = jnp.maximum(qn + xn - 2.0 * qx, 0.0)
+
+    # ---- 2. mask: non-scored neighbors never enter the buffers ----
+    dd = jnp.where(dmask, d, INF)
+    # pack_payload(nb, expanded=False, valid) inline; dmask ⇒ nb >= 0
+    new_pay = jnp.where(dmask, nb | (valid.astype(jnp.int32) << 30), -1)
+
+    # ---- 3. candidate-queue merge (bitonic top-M) ----
+    ocd_ref[...], ocp_ref[...] = merge_topm(
+        cd_ref[...], cp_ref[...], dd, new_pay, m, wq)
+
+    # ---- 4. result-set merge (valid only, bitonic top-K) ----
+    res_in = jnp.where(valid & dmask, dd, INF)
+    res_pay = jnp.where(valid & dmask, nb, -1)
+    ord_ref[...], ori_ref[...] = merge_topm(
+        rd_ref[...], ri_ref[...], res_in, res_pay, k, wr)
+
+
+def fused_step_host(q, x, nb, dist_mask, valid, cand_dist, cand_pay,
+                    res_dist, res_idx):
+    """Host-path (non-TPU) equivalent of the fused kernel.
+
+    Same dataflow — distances, mask, queue merge, result merge in one traced
+    region — but the unrolled bitonic networks are replaced by the log-depth
+    sorted-merge of kernels.topk (XLA:CPU compiles the full network
+    pathologically; see the note there). Distance arithmetic matches the
+    dense backend expression exactly, so dense/pallas parity is bitwise on
+    CPU up to distance ties.
+    """
+    m, k = cand_dist.shape[1], res_dist.shape[1]
+    dd = jnp.where(dist_mask, sqdist_bdrd(q, x), INF)
+    new_pay = jnp.where(dist_mask, nb | (valid.astype(jnp.int32) << 30), -1)
+
+    ns_d, ns_p = sort_kv_f32(dd, new_pay)
+    ocd, ocp = bitonic_merge_sorted(cand_dist.astype(jnp.float32), cand_pay,
+                                    ns_d, ns_p, m)
+
+    res_in = jnp.where(valid & dist_mask, dd, INF)
+    res_pay = jnp.where(valid & dist_mask, nb, -1)
+    rs_d, rs_p = sort_kv_f32(res_in, res_pay)
+    ordd, ori = bitonic_merge_sorted(res_dist.astype(jnp.float32), res_idx,
+                                     rs_d, rs_p, k)
+    return ocd, ocp, ordd, ori
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def fused_step(q, x, nb, dist_mask, valid, cand_dist, cand_pay,
+               res_dist, res_idx, *, block_b: int = 8, interpret: bool = False):
+    """One fused traversal step over a batch of lanes.
+
+    q [B,d], x [B,R,d], nb [B,R] i32, dist_mask/valid [B,R] bool,
+    cand_dist [B,M] f32 + cand_pay [B,M] i32 (packed, sorted ascending),
+    res_dist [B,K] f32 + res_idx [B,K] i32 (sorted ascending)
+    -> (cand_dist, cand_pay, res_dist, res_idx) merged, sorted, best-M/K.
+    """
+    b, dm = q.shape
+    r = x.shape[1]
+    m = cand_dist.shape[1]
+    k = res_dist.shape[1]
+    wq = 1 << (m + r - 1).bit_length()
+    wr = 1 << (k + r - 1).bit_length()
+
+    # Interpret mode simulates grid steps sequentially; a single full-batch
+    # block keeps the simulated step vectorized. On TPU the block size is a
+    # VMEM knob and stays small.
+    bb = min(b, 1024) if interpret else min(block_b, b)
+    pad = (-b) % bb
+    if pad:
+        q = jnp.pad(q, ((0, pad), (0, 0)))
+        x = jnp.pad(x, ((0, pad), (0, 0), (0, 0)))
+        nb = jnp.pad(nb, ((0, pad), (0, 0)), constant_values=-1)
+        dist_mask = jnp.pad(dist_mask, ((0, pad), (0, 0)))
+        valid = jnp.pad(valid, ((0, pad), (0, 0)))
+        cand_dist = jnp.pad(cand_dist, ((0, pad), (0, 0)), constant_values=jnp.inf)
+        cand_pay = jnp.pad(cand_pay, ((0, pad), (0, 0)), constant_values=-1)
+        res_dist = jnp.pad(res_dist, ((0, pad), (0, 0)), constant_values=jnp.inf)
+        res_idx = jnp.pad(res_idx, ((0, pad), (0, 0)), constant_values=-1)
+    bp = q.shape[0]
+
+    kern = functools.partial(_fused_step_kernel, m=m, k=k, wq=wq, wr=wr)
+    ocd, ocp, ordd, ori = pl.pallas_call(
+        kern,
+        grid=(bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, dm), lambda i: (i, 0)),
+            pl.BlockSpec((bb, r, dm), lambda i: (i, 0, 0)),
+            pl.BlockSpec((bb, r), lambda i: (i, 0)),
+            pl.BlockSpec((bb, r), lambda i: (i, 0)),
+            pl.BlockSpec((bb, r), lambda i: (i, 0)),
+            pl.BlockSpec((bb, m), lambda i: (i, 0)),
+            pl.BlockSpec((bb, m), lambda i: (i, 0)),
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, m), lambda i: (i, 0)),
+            pl.BlockSpec((bb, m), lambda i: (i, 0)),
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, m), jnp.float32),
+            jax.ShapeDtypeStruct((bp, m), jnp.int32),
+            jax.ShapeDtypeStruct((bp, k), jnp.float32),
+            jax.ShapeDtypeStruct((bp, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(q.astype(jnp.float32), x, nb, dist_mask, valid,
+      cand_dist.astype(jnp.float32), cand_pay,
+      res_dist.astype(jnp.float32), res_idx)
+    return ocd[:b], ocp[:b], ordd[:b], ori[:b]

@@ -1,9 +1,17 @@
-"""jit'd wrappers around the Pallas kernels with automatic CPU fallback.
+"""jit'd wrappers around the Pallas kernels with automatic host fallback.
 
-On a TPU backend the kernels run compiled (Mosaic); on this CPU container
-they execute in `interpret=True` mode — the kernel body runs in Python on
-CPU, which validates semantics (tests assert allclose vs ref.py) while the
-BlockSpec tiling remains the TPU-target source of truth.
+On a TPU backend the kernels run compiled (Mosaic). On this CPU container:
+
+  sqdist / gbdt   execute via `interpret=True` — the kernel body itself runs
+                  through the Pallas interpreter, validating semantics
+                  (tests assert allclose vs ref.py) while the BlockSpec
+                  tiling remains the TPU-target source of truth.
+  top-M merges    the unrolled compare-exchange networks make XLA:CPU
+                  compile time explode exponentially in stage count (the
+                  Mosaic lowering is unaffected), so the merge kernels
+                  dispatch to semantically-equivalent log-depth host
+                  implementations in kernels.topk / kernels.fused_step;
+                  tests assert exact agreement vs the ref.py oracles.
 """
 from __future__ import annotations
 
@@ -11,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import distance as _distance
+from repro.kernels import fused_step as _fused
 from repro.kernels import gbdt as _gbdt
 from repro.kernels import topk as _topk
 from repro.kernels.topk import pack_payload, unpack_payload  # re-export
@@ -28,8 +37,25 @@ def batched_sqdist(q, x, mask=None):
 
 
 def queue_merge(dist, payload, new_dist, new_payload):
-    return _topk.topm_merge(dist, payload, new_dist, new_payload,
-                            interpret=_interpret())
+    """Merge a **sorted-ascending** [B,M] buffer with raw [B,R] entries.
+
+    The sortedness precondition is load-bearing on the host path (the
+    log-depth merge assumes the buffer is an ascending run); the TPU kernel
+    happens to fully re-sort but callers must not rely on that.
+    """
+    if _interpret():
+        return _topk.topm_merge_host(dist, payload, new_dist, new_payload)
+    return _topk.topm_merge(dist, payload, new_dist, new_payload)
+
+
+def fused_traversal_step(q, x, nb, dist_mask, valid, cand_dist, cand_pay,
+                         res_dist, res_idx):
+    """Fused distance + mask + queue/result merge (one traversal step)."""
+    if _interpret():
+        return _fused.fused_step_host(q, x, nb, dist_mask, valid, cand_dist,
+                                      cand_pay, res_dist, res_idx)
+    return _fused.fused_step(q, x, nb, dist_mask, valid, cand_dist, cand_pay,
+                             res_dist, res_idx)
 
 
 def estimator_predict(feats, packed_model, depth):

@@ -67,6 +67,18 @@ def topm_merge_ref(dist, payload, new_dist, new_payload):
     return keys[:, :m], vals[:, :m]
 
 
+def fused_step_ref(q, x, nb, dist_mask, valid, cand_dist, cand_pay,
+                   res_dist, res_idx):
+    """Oracle for kernels.fused_step: masked distances + dual bitonic merge."""
+    dd = sqdist_masked_ref(q, x, dist_mask)
+    new_pay = jnp.where(dist_mask, nb | (valid.astype(jnp.int32) << 30), -1)
+    ocd, ocp = topm_merge_ref(cand_dist, cand_pay, dd, new_pay)
+    res_in = jnp.where(valid & dist_mask, dd, INF)
+    res_pay = jnp.where(valid & dist_mask, nb, -1)
+    ordd, ori = topm_merge_ref(res_dist, res_idx, res_in, res_pay)
+    return ocd, ocp, ordd, ori
+
+
 def gbdt_predict_ref(feats, feat_idx, thresh, leaf, base, depth):
     """feats [B,F] -> [B]; complete heap-packed trees (see core.gbdt)."""
     b = feats.shape[0]

@@ -22,13 +22,15 @@ from repro.kernels.ref import _bitonic_stages
 INF = float("inf")
 
 
-def _merge_kernel(dist_ref, pay_ref, nd_ref, np_ref, od_ref, op_ref, *, m, width):
-    b = dist_ref.shape[0]
-    pad = width - dist_ref.shape[1] - nd_ref.shape[1]
-    keys = jnp.concatenate(
-        [dist_ref[...], nd_ref[...], jnp.full((b, pad), INF)], axis=1)
-    vals = jnp.concatenate(
-        [pay_ref[...], np_ref[...], jnp.full((b, pad), -1, jnp.int32)], axis=1)
+def bitonic_topm(keys, vals, m):
+    """In-kernel ascending bitonic sort of [b, width] keys (width = pow2)
+    carrying int32 vals through the same selects; returns the best-m prefix.
+
+    Shared by the standalone queue-merge kernel below and the fused
+    traversal-step kernel (kernels.fused_step), which runs it twice —
+    once at queue width, once at result width — inside one VMEM pass.
+    """
+    width = keys.shape[1]
     idx = jnp.arange(width)
     for j, k in _bitonic_stages(width):
         partner = idx ^ j
@@ -43,8 +45,24 @@ def _merge_kernel(dist_ref, pay_ref, nd_ref, np_ref, od_ref, op_ref, *, m, width
         )
         keys = jnp.where(keep_self, keys, k_part)
         vals = jnp.where(keep_self, vals, v_part)
-    od_ref[...] = keys[:, :m]
-    op_ref[...] = vals[:, :m]
+    return keys[:, :m], vals[:, :m]
+
+
+def merge_topm(dist, pay, new_dist, new_pay, m, width):
+    """Pad-concatenate a sorted [b,M] buffer with [b,R] fresh entries and
+    keep the best m via the bitonic network (width = next_pow2(M+R))."""
+    b = dist.shape[0]
+    pad = width - dist.shape[1] - new_dist.shape[1]
+    keys = jnp.concatenate(
+        [dist, new_dist, jnp.full((b, pad), INF)], axis=1)
+    vals = jnp.concatenate(
+        [pay, new_pay, jnp.full((b, pad), -1, jnp.int32)], axis=1)
+    return bitonic_topm(keys, vals, m)
+
+
+def _merge_kernel(dist_ref, pay_ref, nd_ref, np_ref, od_ref, op_ref, *, m, width):
+    od_ref[...], op_ref[...] = merge_topm(
+        dist_ref[...], pay_ref[...], nd_ref[...], np_ref[...], m, width)
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
@@ -84,6 +102,77 @@ def topm_merge(dist, payload, new_dist, new_payload, *, block_b: int = 8,
         interpret=interpret,
     )(dist.astype(jnp.float32), payload, new_dist.astype(jnp.float32), new_payload)
     return od[:b], op[:b]
+
+
+# --------------------------------------------------------------------------
+# host fallback (non-TPU): log-depth merge instead of the unrolled network
+# --------------------------------------------------------------------------
+# XLA:CPU compile time explodes exponentially in the depth of the unrolled
+# compare-exchange chain (measured ~1.7× per stage), so the full log²-stage
+# network above is TPU-only (Mosaic handles it fine). The host path exploits
+# that the *buffer* is already sorted: stable-sort only the R fresh entries
+# (uint32 monotone bitcast — squared distances are non-negative — makes the
+# XLA sort an integer sort), then a single log(width)-stage bitonic *merge*
+# phase combines the two sorted runs. Reshape-based pair exchange keeps every
+# stage pure elementwise min/max — no gathers, which XLA:CPU executes
+# scalar-slow. Exact stable-argsort semantics up to distance ties.
+
+
+def sort_kv_f32(keys, vals):
+    """Stable ascending sort of non-negative f32 keys [B,R] carrying vals."""
+    k_u32 = jax.lax.bitcast_convert_type(keys.astype(jnp.float32), jnp.uint32)
+    ks, vs = jax.lax.sort((k_u32, vals), dimension=1, num_keys=1, is_stable=True)
+    return jax.lax.bitcast_convert_type(ks, jnp.float32), vs
+
+
+def bitonic_merge_sorted(old_d, old_p, ns_d, ns_p, m):
+    """Merge sorted asc [B,M0] with sorted asc [B,R] -> best m, log-depth.
+
+    The inf-padded concat `old ++ pad ++ reversed(new)` is bitonic, so a
+    single merge phase (strides w/2 … 1, all ascending) sorts it. A carried
+    position lane breaks key ties lexicographically in concat order (old
+    entries first, then new in their sorted order, pads last), making the
+    result bitwise-identical to a stable argsort over `[old | new]` — ties
+    included. (The TPU kernel's full network has no such tiebreak; on real
+    ties its payload order may differ.)
+    """
+    b, m0 = old_d.shape
+    r = ns_d.shape[1]
+    w = 1 << (m0 + r - 1).bit_length()
+    pad = w - m0 - r
+    keys = jnp.concatenate(
+        [old_d, jnp.full((b, pad), INF, jnp.float32), ns_d[:, ::-1]], axis=1)
+    vals = jnp.concatenate(
+        [old_p, jnp.full((b, pad), -1, jnp.int32), ns_p[:, ::-1]], axis=1)
+    pos = jnp.broadcast_to(
+        jnp.concatenate([jnp.arange(m0, dtype=jnp.int32),
+                         jnp.arange(m0 + r, w, dtype=jnp.int32),  # pads last
+                         jnp.arange(m0 + r - 1, m0 - 1, -1, dtype=jnp.int32)]),
+        (b, w))
+    j = w // 2
+    while j >= 1:
+        kk = keys.reshape(b, w // (2 * j), 2, j)
+        vv = vals.reshape(b, w // (2 * j), 2, j)
+        pp = pos.reshape(b, w // (2 * j), 2, j)
+        lo_k, hi_k = kk[:, :, 0, :], kk[:, :, 1, :]
+        lo_v, hi_v = vv[:, :, 0, :], vv[:, :, 1, :]
+        lo_p, hi_p = pp[:, :, 0, :], pp[:, :, 1, :]
+        keep = (lo_k < hi_k) | ((lo_k == hi_k) & (lo_p <= hi_p))
+        keys = jnp.stack([jnp.where(keep, lo_k, hi_k),
+                          jnp.where(keep, hi_k, lo_k)], axis=2).reshape(b, w)
+        vals = jnp.stack([jnp.where(keep, lo_v, hi_v),
+                          jnp.where(keep, hi_v, lo_v)], axis=2).reshape(b, w)
+        pos = jnp.stack([jnp.where(keep, lo_p, hi_p),
+                         jnp.where(keep, hi_p, lo_p)], axis=2).reshape(b, w)
+        j //= 2
+    return keys[:, :m], vals[:, :m]
+
+
+def topm_merge_host(dist, payload, new_dist, new_payload):
+    """Host-path equivalent of `topm_merge` (sorted [B,M] + raw [B,R])."""
+    ns_d, ns_p = sort_kv_f32(new_dist, new_payload)
+    return bitonic_merge_sorted(dist.astype(jnp.float32), payload, ns_d, ns_p,
+                                dist.shape[1])
 
 
 def pack_payload(idx, expanded, valid):

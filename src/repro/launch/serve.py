@@ -11,6 +11,7 @@ configuration the paper targets.
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -43,7 +44,8 @@ def main():
     ds = make_dataset(n=args.corpus, dim=48, n_clusters=16, alphabet_size=48,
                       seed=0)
     graph = build_graph_index(ds.vectors, degree=24, seed=0)
-    engine = SearchEngine.build(ds, graph)
+    engine = SearchEngine.build(ds, graph,
+                                backend=os.environ.get("REPRO_BACKEND", "pallas"))
     cfg = SearchConfig(k=4, queue_size=256, pred_kind=PRED_CONTAIN)
     wl_tr = make_label_workload(ds, batch=384, kind="contain", seed=7)
     td = generate_training_data(engine, ds, wl_tr, cfg, probe_budget=64,

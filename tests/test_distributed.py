@@ -39,7 +39,8 @@ def test_spec_rules_divisibility():
         print("OK")
     """)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
     assert "OK" in r.stdout, r.stderr
 
 
@@ -157,7 +158,8 @@ def test_checkpoint_elastic_reshard(tmp_path):
         print("OK")
     """)
     r = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                       text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+                       text=True, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "JAX_PLATFORMS": "cpu"})
     assert "OK" in r.stdout, r.stderr
 
 

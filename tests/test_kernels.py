@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st  # hypothesis or fallback
 
 from repro.core.gbdt import train_gbdt
 from repro.kernels import ops, ref
@@ -75,6 +75,114 @@ def test_topm_merge(b, m, r):
     # output sortedness invariant
     g = np.asarray(gd)
     assert (np.diff(g, axis=1)[np.isfinite(g[:, 1:])] >= 0).all()
+
+
+def test_topm_merge_host_stable_on_ties():
+    """Host merge == stable argsort over [old|new] even with tied keys."""
+    from repro.kernels.topk import topm_merge_host
+
+    rng = np.random.default_rng(7)
+    b, m, r = 6, 32, 16
+    dist = np.sort(rng.integers(0, 6, (b, m)).astype(np.float32), axis=1)
+    dist[:, 3 * m // 4:] = np.inf
+    pay = rng.integers(0, 1 << 20, (b, m)).astype(np.int32)
+    pay[np.isinf(dist)] = -1
+    nd = rng.integers(0, 6, (b, r)).astype(np.float32)
+    npay = rng.integers(0, 1 << 20, (b, r)).astype(np.int32)
+    gd, gp = topm_merge_host(jnp.asarray(dist), jnp.asarray(pay),
+                             jnp.asarray(nd), jnp.asarray(npay))
+    d = np.concatenate([dist, nd], axis=1)
+    p = np.concatenate([pay, npay], axis=1)
+    order = np.argsort(d, axis=1, kind="stable")[:, :m]
+    np.testing.assert_array_equal(np.asarray(gd),
+                                  np.take_along_axis(d, order, axis=1))
+    np.testing.assert_array_equal(np.asarray(gp),
+                                  np.take_along_axis(p, order, axis=1))
+
+
+def test_topm_merge_kernel_interpret_micro():
+    """Execute the actual Pallas kernel body (interpret mode) at a width
+    small enough for XLA:CPU to compile the unrolled network."""
+    from repro.kernels.topk import topm_merge
+
+    rng = np.random.default_rng(3)
+    b, m, r = 4, 8, 4  # width 16 -> 10 unrolled stages
+    dist = np.sort(rng.random((b, m)).astype(np.float32), axis=1)
+    pay = rng.integers(0, 1 << 20, (b, m)).astype(np.int32)
+    nd = rng.random((b, r)).astype(np.float32)
+    npay = rng.integers(0, 1 << 20, (b, r)).astype(np.int32)
+    gd, gp = topm_merge(jnp.asarray(dist), jnp.asarray(pay),
+                        jnp.asarray(nd), jnp.asarray(npay), interpret=True)
+    wd, wp = ref.topm_merge_ref(jnp.asarray(dist), jnp.asarray(pay),
+                                jnp.asarray(nd), jnp.asarray(npay))
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+    np.testing.assert_array_equal(np.asarray(gp), np.asarray(wp))
+
+
+def test_fused_step_kernel_interpret_micro():
+    """Same for the fused traversal-step kernel body."""
+    from repro.kernels.fused_step import fused_step
+
+    rng = np.random.default_rng(4)
+    b, m, r, k, d = 4, 8, 4, 2, 8  # wq=16 (10 stages), wr=8 (6 stages)
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(b, r, d)).astype(np.float32))
+    nb = jnp.asarray(rng.integers(0, 1 << 20, (b, r)).astype(np.int32))
+    dmask = jnp.asarray(rng.random((b, r)) < 0.8)
+    vmask = jnp.asarray(rng.random((b, r)) < 0.5) & dmask
+    cd = jnp.asarray(np.sort(rng.random((b, m)).astype(np.float32) * 50, axis=1))
+    cp = jnp.asarray(rng.integers(0, 1 << 20, (b, m)).astype(np.int32))
+    rd = jnp.asarray(np.sort(rng.random((b, k)).astype(np.float32) * 50, axis=1))
+    ri = jnp.asarray(rng.integers(0, 1 << 20, (b, k)).astype(np.int32))
+    got = fused_step(q, x, nb, dmask, vmask, cd, cp, rd, ri, interpret=True)
+    want = ref.fused_step_ref(q, x, nb, dmask, vmask, cd, cp, rd, ri)
+    for g, w in zip(got, want):
+        g, w = np.asarray(g), np.asarray(w)
+        if g.dtype == np.float32:
+            finite = np.isfinite(w)
+            np.testing.assert_allclose(g[finite], w[finite], rtol=1e-5, atol=1e-5)
+            assert np.isinf(g[~finite]).all()
+        else:
+            np.testing.assert_array_equal(g, w)
+
+
+# ------------------------------------------------------------ fused step ----
+@pytest.mark.parametrize("b,m,r,k,d", [(4, 32, 8, 5, 12), (8, 128, 32, 10, 24),
+                                       (3, 64, 17, 7, 33)])
+def test_fused_step_vs_ref(b, m, r, k, d):
+    """ops.fused_traversal_step == ref oracle (distances + dual merge)."""
+    rng = np.random.default_rng(b * 100 + m + r)
+    q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
+    x = jnp.asarray(rng.normal(size=(b, r, d)).astype(np.float32))
+    nb = jnp.asarray(rng.integers(0, 1 << 20, (b, r)).astype(np.int32))
+    dmask = jnp.asarray(rng.random((b, r)) < 0.8)
+    vmask = jnp.asarray(rng.random((b, r)) < 0.5) & dmask
+    cd = np.sort(rng.random((b, m)).astype(np.float32) * 50, axis=1)
+    cd[:, m // 2:] = np.inf  # half-empty buffer
+    cp = rng.integers(0, 1 << 20, (b, m)).astype(np.int32)
+    cp[np.isinf(cd)] = -1
+    rd = np.sort(rng.random((b, k)).astype(np.float32) * 50, axis=1)
+    rd[:, k // 2:] = np.inf
+    ri = rng.integers(0, 1 << 20, (b, k)).astype(np.int32)
+    ri[np.isinf(rd)] = -1
+
+    args = (q, x, nb, dmask, vmask, jnp.asarray(cd), jnp.asarray(cp),
+            jnp.asarray(rd), jnp.asarray(ri))
+    got = ops.fused_traversal_step(*args)
+    want = ref.fused_step_ref(*args)
+    for g, w, name in zip(got, want, ("cand_dist", "cand_pay",
+                                      "res_dist", "res_idx")):
+        g, w = np.asarray(g), np.asarray(w)
+        if g.dtype == np.float32:
+            finite = np.isfinite(w)
+            np.testing.assert_allclose(g[finite], w[finite], rtol=1e-5,
+                                       atol=1e-5, err_msg=name)
+            assert np.isinf(g[~finite]).all(), name
+        else:
+            np.testing.assert_array_equal(g, w, err_msg=name)
+    # sortedness invariant on both output buffers
+    for gd in (np.asarray(got[0]), np.asarray(got[2])):
+        assert (np.diff(gd, axis=1)[np.isfinite(gd[:, 1:])] >= 0).all()
 
 
 def test_payload_pack_roundtrip():

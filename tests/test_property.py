@@ -1,7 +1,7 @@
 """Property-based tests (hypothesis) on system invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp_compat import given, settings, st  # hypothesis or fallback
 
 from repro.core.gbdt import train_gbdt
 from repro.core.estimator import spearman
