@@ -1,0 +1,353 @@
+"""Serving benchmark: budget-bucketed scheduling vs fixed synchronous batches.
+
+Protocol (container noisy-timing discipline — this machine's speed drifts
+by several × on a scale of minutes, so raw wall-clock A/B comparisons
+measure the machine, not the scheduler):
+
+- One world (index + graph + mixed contain/range estimator, via
+  `repro.launch.serve.build_world`), one mixed-difficulty request stream.
+- A *calibrated virtual clock*: warmed-up real engine calls measure
+  `busy = C0 + C1(width)·steps` (dispatch floor + lockstep trip count ×
+  per-step cost; per-step cost scales ~linearly with lane width on CPU,
+  which is why the batcher's width ladder matters). Both systems are then
+  simulated deterministically under the same measured model, with real
+  engine execution driving the scheduling decisions and results.
+- Open-loop Poisson arrivals at `--load` × the baseline's model capacity,
+  replayed identically against both systems — queueing delay is modeled
+  honestly and identically for both.
+- **fixed-batch baseline** = the scheduler with a single unbounded bucket:
+  FIFO micro-batches where every lane resumes to its full Ŵ_q and easy
+  lanes wait on the batch tail. Identical code path, so the measured delta
+  is purely the bucket scheduling.
+- **bucketed** = budget buckets fit to the offline W_q distribution (caps
+  inside the cost mass — see the comment at the fitting site) under
+  direct routing: each probed request goes to the bucket covering its
+  Ŵ_q, so batchmates have similar remaining work (each batch's wall is
+  its own cost level, not the global tail) and partial batches run at
+  their natural ladder width, whose per-step cost is proportionally
+  cheaper. The escalate (MLFQ) time-slicing policy remains available via
+  ServeConfig(policy="escalate").
+
+Both systems execute every request to the same predicted budget, so results
+(top-k ids, distances, NDC) are bit-identical and recall is equal by
+construction — enforced with hard assertions, so the bench fails rather
+than record a speedup at different quality; the
+benchmark reports the latency distribution delta and writes
+`BENCH_serve.json` at the repo root.
+
+    PYTHONPATH=src python -m benchmarks.serve_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import copy
+import json
+import os
+
+import numpy as np
+
+
+def clone_requests(reqs):
+    """Fresh lifecycle state, shared immutable payloads."""
+    out = []
+    for r in reqs:
+        c = copy.copy(r)
+        c.state = None
+        c.budget = None
+        c.executed = 0
+        c.n_slices = 0
+        c.probe_done = None
+        c.completed = None
+        c.cache_hit = False
+        c.res_idx = None
+        c.res_dist = None
+        c.ndc = None
+        out.append(c)
+    return out
+
+
+def simulate(make_sched, reqs, arrivals):
+    """Open-loop replay on a simulated clock driven by measured service
+    times. Returns (scheduler, served requests)."""
+    sched = make_sched()
+    reqs = clone_requests(reqs)
+    n = len(reqs)
+    t, i = float(arrivals[0]), 0
+    pumps = 0
+    while i < n or sched.has_work():
+        pumps += 1
+        if pumps > 100 * n:  # safety: a scheduler bug must fail, not hang
+            raise RuntimeError(f"simulate stuck: t={t} i={i} "
+                               f"depth={sched.depth()}")
+        while i < n and arrivals[i] <= t + 1e-12:
+            sched.submit(reqs[i], float(arrivals[i]))
+            i += 1
+        if not sched.has_work():
+            t = float(arrivals[i])
+            continue
+        _, busy = sched.pump(t)
+        if busy > 0:
+            t += busy
+        else:
+            # every queued batch is gated on batch_wait: idle-advance to
+            # the next arrival or the earliest batch deadline
+            nxt = [sched.next_deadline()]
+            if i < n:
+                nxt.append(float(arrivals[i]))
+            t = max(t, min(x for x in nxt if x is not None))
+    return sched, reqs
+
+
+def calibrate_service_model(engine, cfg, ds, widths, probe, queue_size):
+    """Measure the engine's real cost constants per lane width.
+
+    The lockstep per-batch cost is C0 (dispatch floor — measured by
+    resuming with an already-met budget) plus trip-count × C1(width);
+    C1 genuinely scales with lane width on CPU (the einsum is B-wide), so
+    each width in the batcher's ladder is measured separately. Charging
+    both systems by this measured model instead of the wall clock makes
+    the simulation deterministic: this container's speed drifts by
+    several × on a scale of minutes, which otherwise swamps any scheduling
+    effect (one system's timed window lands in a fast phase, the other's
+    in a slow one). min-of-N timing per constant, per the container's
+    noisy-timing discipline."""
+    import time as _time
+
+    import jax
+
+    from repro.data import make_label_workload
+
+    budget = probe + 8 * queue_size
+    c0s, c1 = [], {}
+    for w in widths:
+        wl = make_label_workload(ds, batch=w, kind="contain", seed=321)
+        st = engine.search(cfg, wl.queries, wl.spec, probe)
+        entry_hops = np.asarray(jax.block_until_ready(st).hops)
+
+        def noop():
+            return engine.search(cfg, wl.queries, wl.spec, probe, state=st)
+
+        def run():
+            return engine.search(cfg, wl.queries, wl.spec, budget, state=st)
+
+        jax.block_until_ready(noop())
+        c0 = min(_timed(noop) for _ in range(5))
+        c0s.append(c0)
+        out = jax.block_until_ready(run())  # compile + warm
+        best = min(_timed(run) for _ in range(3))
+        steps = int((np.asarray(out.hops) - entry_hops).max())
+        c1[w] = max(best - c0, 1e-6) / max(steps, 1)
+    return float(np.median(c0s)), c1
+
+
+def _timed(fn):
+    import time as _time
+
+    import jax
+
+    t0 = _time.perf_counter()
+    jax.block_until_ready(fn())
+    return _time.perf_counter() - t0
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=224)
+    ap.add_argument("--corpus", type=int, default=12000)
+    ap.add_argument("--train-queries", type=int, default=384)
+    # M=512 keeps real cost heterogeneity: at small M the candidate queue
+    # exhausts early and every query's step cost compresses toward the
+    # same exhaustion ceiling, leaving nothing for a scheduler to separate.
+    # The calibrated virtual clock makes the large-M regime affordable —
+    # the engine's (slow) real CPU wall time no longer sets the measured
+    # latencies, only the per-step/per-dispatch constants do.
+    ap.add_argument("--queue-size", type=int, default=512)
+    ap.add_argument("--lane-width", type=int, default=16)
+    ap.add_argument("--alpha", type=float, default=1.5)
+    ap.add_argument("--probe", type=int, default=64)
+    ap.add_argument("--load", type=float, default=0.95,
+                    help="offered load as a fraction of fixed-batch capacity")
+    ap.add_argument("--hard-fraction", type=float, default=0.2,
+                    help="fraction of anti-correlated (hard) filters; the "
+                         "production-shaped default is a mostly-easy stream "
+                         "with a hard tail, so nearly every fixed batch of "
+                         "16 contains at least one tail lane")
+    ap.add_argument("--quick", action="store_true",
+                    help="small world for smoke runs")
+    args = ap.parse_args()
+    if args.quick:
+        args.requests, args.corpus = 48, 4000
+        args.train_queries, args.queue_size = 192, 128
+
+    from repro.index.bruteforce import recall_at_k
+    from repro.launch.serve import build_world, mixed_requests
+    from repro.serve import CostAwareScheduler, ServeConfig
+
+    print("# bring-up (index + graph + mixed-workload estimator)")
+    backend = os.environ.get("REPRO_BACKEND", "dense")
+    ds, graph, engine, cfg, est = build_world(
+        args.corpus, args.train_queries, args.queue_size, k=10,
+        probe=args.probe, backend=backend)
+    reqs = mixed_requests(ds, args.requests, seed=500,
+                          hard_fraction=args.hard_fraction)
+    for i, r in enumerate(reqs):
+        r.rid = i
+
+    # Budget buckets fit to the offline cost distribution. Under direct
+    # routing a batch's wall is the max Ŵ inside it, so caps belong inside
+    # the mass — splitting the bulk from the tail shoulder — where they
+    # actually separate batch walls; caps out in the tails separate
+    # nothing and only fragment the queues.
+    wq = np.concatenate([np.asarray(b) for b in _train_wq(engine, ds, cfg, est,
+                                                          args)])
+    caps = tuple(int(np.quantile(wq, q) * args.alpha) for q in (0.40, 0.70))
+    caps = tuple(sorted(set(caps)))
+    print(f"# bucket caps (from W_q p40/p70 × α): {caps}")
+
+    def make(buckets, model=None, policy="direct", wait=0.0):
+        def mk():
+            # fill=True: riders take only the pad lanes of a batch's
+            # natural ladder width (free — they never widen the batch),
+            # giving queued hard requests clamped resume-exact progress
+            return CostAwareScheduler(engine, est, cfg, ServeConfig(
+                lane_width=args.lane_width, buckets=buckets, fill=True,
+                policy=policy, batch_wait=wait, probe_budget=args.probe,
+                alpha=args.alpha, cache_capacity=0,
+                queue_capacity=10 * args.requests),
+                service_model=model)
+        return mk
+
+    # measure the engine's real cost constants, then everything downstream
+    # runs on the deterministic virtual clock
+    widths = tuple(sorted({max(1, args.lane_width // 4),
+                           max(1, args.lane_width // 2), args.lane_width}))
+    print("# calibrating service model (per lane width)")
+    c0, c1 = calibrate_service_model(engine, cfg, ds, widths, args.probe,
+                                     args.queue_size)
+    model = lambda steps, w: c0 + c1[w] * steps  # noqa: E731
+    print("# model: busy = %.1f ms + steps × {%s} µs" % (
+        1e3 * c0, ", ".join(f"w{w}: {1e6*v:.0f}" for w, v in c1.items())))
+
+    # offered load calibrated against the baseline's virtual capacity
+    sched, _ = simulate(make((None,), model), reqs, np.zeros(len(reqs)))
+    capacity = len(reqs) / sched.summary()["busy_time"]
+    rate = args.load * capacity
+    rng = np.random.default_rng(9)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, size=len(reqs)))
+    # both systems get the same anti-fragmentation dispatch gate: a partial
+    # batch may wait about half a lane-fill interval for batchmates
+    wait = 0.5 * args.lane_width / rate
+    print(f"# capacity ≈ {capacity:.1f} req/s → offered {rate:.1f} req/s, "
+          f"batch_wait={1e3*wait:.0f} ms")
+
+    rows = {}
+    served = {}
+    # virtual-clock runs are deterministic — one round each suffices
+    for name, mk in (("fixed_batch", make((None,), model, wait=wait)),
+                     ("bucketed", make(caps + (None,), model, wait=wait))):
+        sched, done = simulate(mk, reqs, arrivals)
+        s = sched.summary()
+        rows[name], served[name] = s, done
+        lat = s["latency"]
+        print(f"{name}: p50/p95/p99 = {1e3*lat['p50']:.0f}/"
+              f"{1e3*lat['p95']:.0f}/{1e3*lat['p99']:.0f} ms  "
+              f"busy={s['busy_time']:.2f}s batches={s['n_batches']} "
+              f"requeues={s['n_requeues']}")
+        for ph, d in sorted(s["batches_by_phase"].items()):
+            print(f"#   {ph}: n={d['n']} fill={d['mean_fill']:.1f} "
+                  f"busy={d['busy']:.2f}s")
+
+    # equal results / equal recall by construction — enforced, not assumed:
+    # a scheduler change that breaks resume-exactness must fail the bench,
+    # not publish a speedup at silently different quality
+    by_rid = {r.rid: r for r in served["fixed_batch"]}
+    identical = all(
+        np.array_equal(by_rid[r.rid].res_idx, r.res_idx)
+        and np.array_equal(by_rid[r.rid].res_dist, r.res_dist)
+        and by_rid[r.rid].ndc == r.ndc
+        for r in served["bucketed"])
+    assert identical, "bucketed results diverged from fixed-batch"
+    recall = {}
+    gt = _ground_truth(ds, reqs, k=cfg.k)
+    for name, done in served.items():
+        idx = np.stack([r.res_idx for r in sorted(done, key=lambda x: x.rid)])
+        recall[name] = float(recall_at_k(idx, gt).mean())
+    assert recall["fixed_batch"] == recall["bucketed"], recall
+    speedup = {q: rows["fixed_batch"]["latency"][q] /
+                  max(rows["bucketed"]["latency"][q], 1e-12)
+               for q in ("p50", "p95", "p99")}
+    print(f"results_bit_identical={identical} recall={recall}")
+    print(f"speedup p50/p95/p99 = {speedup['p50']:.2f}x/"
+          f"{speedup['p95']:.2f}x/{speedup['p99']:.2f}x")
+
+    out = dict(
+        protocol=dict(requests=args.requests, corpus=args.corpus,
+                      lane_width=args.lane_width, alpha=args.alpha,
+                      probe_budget=args.probe, load=args.load,
+                      hard_fraction=args.hard_fraction, backend=backend,
+                      queue_size=args.queue_size, bucket_caps=list(caps),
+                      arrivals="poisson", batch_wait=wait,
+                      service_model=dict(
+                          c0_seconds=c0,
+                          c1_seconds_by_width={str(w): v
+                                               for w, v in c1.items()}),
+                      timing="calibrated virtual clock: busy = C0 + "
+                             "C1(width)*steps, constants measured on "
+                             "warmed-up real engine calls per lane width"),
+        fixed_batch=rows["fixed_batch"],
+        bucketed=rows["bucketed"],
+        speedup=speedup,
+        recall=recall,
+        results_bit_identical=bool(identical),
+    )
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"# wrote {os.path.normpath(path)}")
+
+
+def _train_wq(engine, ds, cfg, est, args):
+    """Offline W_q samples for bucket fitting — reuse the estimator's own
+    training distribution by re-predicting on a held-out mixed workload
+    (cheap: probe only, no exhaustion)."""
+    import dataclasses
+
+    from repro.core import probe_and_features
+    from repro.core.e2e import predict_budgets
+    from repro.data import make_label_workload, make_range_workload
+    from repro.filters.predicates import PRED_CONTAIN, PRED_RANGE
+
+    out = []
+    for kind, pred in (("contain", PRED_CONTAIN), ("range", PRED_RANGE)):
+        wl = (make_label_workload(ds, batch=96, kind=kind, seed=77,
+                                  hard_fraction=args.hard_fraction)
+              if kind == "contain" else
+              make_range_workload(ds, batch=96, seed=78,
+                                  hard_fraction=args.hard_fraction))
+        c = dataclasses.replace(cfg, pred_kind=pred)
+        _, z = probe_and_features(engine, c, wl.queries, wl.spec, args.probe)
+        budgets, _ = predict_budgets(est, z, 1.0)
+        out.append(np.asarray(budgets))
+    return out
+
+
+def _ground_truth(ds, reqs, k: int):
+    from repro.index import filtered_knn_exact
+    from repro.serve.queue import batch_spec
+
+    order = sorted(reqs, key=lambda r: r.rid)
+    gt = np.zeros((len(order), k), np.int64)
+    # group by kind (batch_spec cannot mix predicate kinds)
+    for kind in {r.kind for r in order}:
+        grp = [r for r in order if r.kind == kind]
+        spec = batch_spec(grp, len(grp))
+        q = np.stack([r.query for r in grp])
+        idx, _ = filtered_knn_exact(q, ds.vectors, spec, ds.labels_packed,
+                                    ds.values, k)
+        for r, row in zip(grp, idx):
+            gt[r.rid] = row
+    return gt
+
+
+if __name__ == "__main__":
+    main()

@@ -1,14 +1,15 @@
-"""End-to-end serving driver: a small LM answers batched requests with
-filtered-RAG retrieval powered by the E2E engine.
+"""End-to-end RAG example — a thin client of the `repro.serve` subsystem.
 
-Per request: (1) embed the prompt (stub projection — the corpus *is* the
-embedding space), (2) filtered AKNN search with a metadata constraint and a
-per-query adaptive budget from the cost estimator, (3) prepend retrieved doc
-ids as context tokens, (4) batched greedy decode with a KV cache.
+Per request: (1) the query vector stands in for an embedded prompt, (2) the
+cost-aware scheduler serves the filtered AKNN search (admission → shared
+probe → budget estimate → budget-bucketed micro-batch → resume/requeue),
+(3) retrieved doc ids are prepended as context tokens, (4) batched greedy
+decode with a KV cache.
 
-This is the paper's deployment story: retrieval latency is bounded per
-query by predicted budgets, and the batch tail is clamped
-(fault_tolerance.clamp_budgets) so one hard filter can't stall the batch.
+This is the paper's deployment story upgraded from a demo loop to the real
+serving path: per-query budgets come from the cost estimator, and instead of
+clamping the batch tail after the fact, hard queries are *routed* to
+long-budget buckets so they never stall their easy batchmates.
 
     PYTHONPATH=src python examples/serve_rag.py
 """
@@ -21,14 +22,13 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.core import (CostEstimator, SearchConfig, SearchEngine,
-                        e2e_search, generate_training_data)
-from repro.core.e2e import probe_and_features
+                        generate_training_data)
 from repro.data import make_dataset, make_label_workload
-from repro.distributed.fault_tolerance import clamp_budgets
 from repro.filters.predicates import PRED_CONTAIN
 from repro.index import build_graph_index
 from repro.models import build_model, split_tree
 from repro.models.transformer import _pad_cache_seq
+from repro.serve import CostAwareScheduler, ServeConfig, requests_from_workload
 
 
 def main():
@@ -49,17 +49,24 @@ def main():
     model = build_model(mcfg)
     prm, _ = split_tree(model.init_params(jax.random.key(0)))
 
-    print("== batched requests: prompt + label filter")
+    print("== batched requests: prompt + label filter, via the scheduler")
     wl = make_label_workload(ds, batch=batch, kind="contain", seed=42)
+    sched = CostAwareScheduler(
+        engine, est, cfg,
+        ServeConfig(lane_width=batch, buckets=(256, 1024, None),
+                    probe_budget=64, alpha=1.5))
+    reqs = requests_from_workload(wl)
 
     t0 = time.time()
-    r = e2e_search(engine, est, cfg, wl.queries, wl.spec, probe_budget=64,
-                   alpha=1.5)
-    budgets, requeue = clamp_budgets(r.predicted_budget, quantile=0.9)
-    doc_ids = np.asarray(r.state.res_idx)
-    print(f"   retrieval: {1e3*(time.time()-t0)/batch:.1f} ms/query, "
-          f"mean NDC={np.asarray(r.state.cnt).mean():.0f}, "
-          f"{int(requeue.sum())} hard queries flagged for re-queue")
+    for r in reqs:
+        sched.submit(r, time.time() - t0)
+    sched.run_until_idle(time.time() - t0)
+    s = sched.summary()
+    doc_ids = np.stack([r.res_idx for r in reqs])
+    print(f"   retrieval: p99 {1e3*s['latency']['p99']:.1f} ms, "
+          f"mean NDC={np.mean([r.ndc for r in reqs]):.0f}, "
+          f"{s['n_requeues']} hard-query requeues, "
+          f"{s['n_batches']} micro-batches")
 
     # context = [doc tokens] + prompt tokens (stub tokenization of doc ids)
     prompt_len = 8

@@ -19,6 +19,7 @@ CHUNKS=(
   "tests/test_kernels.py tests/test_property.py"
   "tests/test_backends.py"
   "tests/test_system.py"
+  "tests/test_serve.py"
   "tests/test_distributed.py"
   "tests/test_models_smoke.py tests/test_dryrun_small.py"
 )
@@ -29,6 +30,14 @@ for chunk in "${CHUNKS[@]}"; do
   # shellcheck disable=SC2086
   python -m pytest -q ${chunk} "$@" || fail=1
 done
+
+# Serving-path smoke: the launcher must stay runnable end to end (admission →
+# probe → bucket → resume → report), not just unit-tested. Shrunk bring-up
+# (corpus/training) — the serving path exercised is identical and the W_q
+# ground-truth labeling is the expensive part.
+echo "=== serve smoke ==="
+python -m repro.launch.serve --requests 8 --batch 4 \
+  --corpus 2000 --train-queries 64 || fail=1
 
 if [ "$fail" -ne 0 ]; then
   echo "CI: FAILURES (see chunks above)"

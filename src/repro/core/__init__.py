@@ -1,6 +1,7 @@
 # The paper's primary contribution: E2E cost estimation + adaptive
 # termination for filtered AKNN search, as a composable JAX module.
 from repro.core.search import SearchConfig, SearchState, run_search, init_state
+from repro.core.state import take_lanes, concat_lanes, pad_lanes
 from repro.core.backends import (
     TraversalBackend,
     available_backends,
@@ -18,7 +19,7 @@ from repro.core.features import (
 from repro.core.gbdt import GBDTModel, train_gbdt, predict_jax
 from repro.core.estimator import CostEstimator, spearman
 from repro.core.training import TrainingData, generate_training_data
-from repro.core.e2e import E2EResult, e2e_search
+from repro.core.e2e import E2EResult, e2e_search, predict_budgets, probe_and_features
 from repro.core import baselines
 
 __all__ = [
@@ -47,5 +48,10 @@ __all__ = [
     "generate_training_data",
     "E2EResult",
     "e2e_search",
+    "predict_budgets",
+    "probe_and_features",
+    "take_lanes",
+    "concat_lanes",
+    "pad_lanes",
     "baselines",
 ]

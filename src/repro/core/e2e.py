@@ -62,6 +62,30 @@ def probe_and_features(
     return state, jnp.concatenate([z2, z2 - z1], axis=1)
 
 
+def predict_budgets(
+    estimator: CostEstimator,
+    feats,
+    alpha: float,
+    min_budget: int = 32,
+    max_budget: int = BIG_BUDGET,
+    ablate_filter: bool = False,
+    packed=None,
+):
+    """Stage 2 of the pipeline: features → clipped per-lane budgets Ŵ_q.
+
+    Factored out of `e2e_search` so the serving scheduler's probe batches go
+    through byte-for-byte the same prediction path as the one-shot pipeline
+    (the scheduled-vs-oneshot equivalence guarantee depends on it). Returns
+    (budgets [B] i32, feats-as-predicted) — the latter reflects ablation.
+    """
+    if ablate_filter:
+        feats = ablate_filter_features(feats)
+    packed = estimator.packed() if packed is None else packed
+    budgets = estimator.predict_budget_jax(packed, feats, alpha, min_budget,
+                                           max_budget)
+    return budgets, feats
+
+
 def e2e_search(
     engine: SearchEngine,
     estimator: CostEstimator,
@@ -82,10 +106,9 @@ def e2e_search(
                                       n_probes)
 
     # --- stage 2: cost estimation ---
-    if ablate_filter:
-        feats = ablate_filter_features(feats)
     packed = estimator.packed()
-    budgets = estimator.predict_budget_jax(packed, feats, alpha, min_budget, max_budget)
+    budgets, feats = predict_budgets(estimator, feats, alpha, min_budget,
+                                     max_budget, ablate_filter, packed=packed)
 
     # --- stage 3: adaptive termination (resume with predicted budget) ---
     if repredict_every <= 0:

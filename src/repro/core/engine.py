@@ -28,7 +28,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.search import SearchConfig, SearchState, run_search
-from repro.core.state import init_state  # noqa: F401  (public re-export)
+from repro.core.state import init_state, pad_lanes  # noqa: F401  (re-export)
 from repro.data.synthetic import AttributedDataset
 from repro.distributed.sharding import batch_spec
 from repro.filters.predicates import FilterSpec, PRED_RANGE
@@ -47,13 +47,10 @@ def make_search_mesh(devices=None) -> Mesh | None:
     return Mesh(np.asarray(devices), (BATCH_AXIS,))
 
 
-def _pad_batch(tree, pad: int):
-    """Zero-pad every array leaf along axis 0 (padded lanes self-deactivate
-    on their 0 NDC budget, so the values never influence real lanes)."""
-    if pad == 0:
-        return tree
-    return jax.tree.map(
-        lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1)), tree)
+# Shard padding shares the serving layer's lane-surgery helper: padded lanes
+# self-deactivate on their 0 NDC budget, so the values never influence real
+# lanes.
+_pad_batch = pad_lanes
 
 
 @dataclasses.dataclass

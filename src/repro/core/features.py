@@ -91,8 +91,13 @@ def _stats_sorted(dist: jax.Array, d_start: jax.Array):
     return head, tail, mean, var, percs, fill
 
 
+@jax.jit
 def extract_features(state: SearchState) -> jax.Array:
-    """SearchState -> [B, N_FEATURES] float32 feature matrix z_q."""
+    """SearchState -> [B, N_FEATURES] float32 feature matrix z_q.
+
+    Jitted: ~60 elementwise/stat ops over small arrays — eager per-op
+    dispatch on CPU costs more than the math and would dominate the
+    serving scheduler's probe batches (it runs twice per probe)."""
     ds = jnp.maximum(state.d_start, 1e-12)
 
     qh, qt, qm, qv, qp, qfill = _stats_sorted(state.cand_dist, state.d_start)

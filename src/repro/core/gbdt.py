@@ -15,6 +15,7 @@ and implemented as a Pallas kernel in `repro.kernels.gbdt`.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -80,8 +81,13 @@ class GBDTModel:
         )
 
 
+@functools.partial(jax.jit, static_argnames=("depth",))
 def predict_jax(packed, x: jax.Array, depth: int) -> jax.Array:
-    """x[B, F] -> [B] predictions; `packed` from GBDTModel.pack_jax()."""
+    """x[B, F] -> [B] predictions; `packed` from GBDTModel.pack_jax().
+
+    Jitted: the unrolled depth-loop is ~4·depth tiny ops whose eager
+    dispatch (~0.7 ms each on CPU) would otherwise dominate serving-path
+    probe batches."""
     feat, thresh, leaf, base = packed
     t = feat.shape[0]
     n_internal = feat.shape[1]

@@ -15,6 +15,7 @@ Key structures (all static shapes):
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import NamedTuple
 
 import jax
@@ -121,6 +122,46 @@ def init_state(
 def prepare_resume(state: SearchState) -> SearchState:
     """Reactivate lanes that stopped purely on budget (probe → resume)."""
     return state._replace(active=jnp.ones_like(state.active))
+
+
+# ---- lane surgery (serving layer) -------------------------------------------
+# The lockstep loop has no cross-lane collectives, so a SearchState (or any
+# per-query pytree) can be sliced apart and re-stacked freely between search
+# calls: a lane's trajectory depends only on its own buffers. The serving
+# scheduler relies on this to carry individual requests' states across
+# micro-batches (probe batch → budget-bucket batch → requeue batch).
+
+
+# All three helpers are jitted: a SearchState has ~17 leaves, and eager
+# per-op dispatch (~0.7 ms/op on CPU) would make every slice/stack cost
+# more than the traversal work it routes. Retraces are bounded by the few
+# distinct (tree structure, lane count) combinations a scheduler produces.
+
+
+@jax.jit
+def take_lanes(tree, idx):
+    """Select lanes `idx` (int array / list) along axis 0 of every leaf."""
+    idx = jnp.asarray(idx, jnp.int32)
+    return jax.tree.map(lambda a: a[idx], tree)
+
+
+@jax.jit
+def concat_lanes(trees):
+    """Stack per-lane pytrees ([b_i, ...] leaves) into one batch along axis 0."""
+    if len(trees) == 1:
+        return trees[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *trees)
+
+
+@functools.partial(jax.jit, static_argnames=("pad",))
+def pad_lanes(tree, pad: int):
+    """Zero-pad every array leaf along axis 0. Padded lanes are inert: they
+    carry a 0 NDC budget at the call site and deactivate on their first step,
+    so the zero values never influence real lanes."""
+    if pad == 0:
+        return tree
+    return jax.tree.map(
+        lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1)), tree)
 
 
 def topk_results(state: SearchState) -> tuple[np.ndarray, np.ndarray]:

@@ -1,10 +1,17 @@
-"""Production serving launcher: filtered-RAG request loop.
+"""Production serving launcher — thin client of the `repro.serve` subsystem.
 
-Batches of (query vector, filter) requests flow through the E2E engine
-(probe → cost estimate → adaptive termination) with batch-tail clamping;
-retrieved doc ids condition a decoder LM (tiny config on this container).
-Reports per-stage latency and the NDC distribution — the deployment
-configuration the paper targets.
+Mixed (contain + range) filtered-AKNN requests flow through the cost-aware
+scheduler: admission with backpressure → shared probe → GBDT cost estimate →
+budget-bucketed micro-batches → resume/requeue on the carried SearchState.
+Easy queries complete in short-budget batches instead of waiting on the
+hardest lane of a fixed batch; hard queries are routed (or time-sliced) into
+long-budget batches. This replaces the old fixed-batch loop whose
+`clamp_budgets` call ran *after* the search had already finished — its
+output was computed and discarded; budget bounding now happens where it
+belongs, in the scheduler's bucket routing, before any resume work runs.
+
+Optionally (--gen-len > 0) the retrieved doc ids condition a tiny decoder LM,
+the paper's filtered-RAG deployment story.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 64 --batch 16
 """
@@ -17,40 +24,132 @@ import time
 import numpy as np
 
 
+def build_world(corpus: int, train_queries: int, queue_size: int, k: int,
+                probe: int, backend: str | None, seed: int = 0):
+    """Index + graph + engine + a single estimator trained on a *mixed*
+    contain/range workload (features are predicate-agnostic, so one GBDT
+    serves both request kinds)."""
+    import dataclasses
+
+    from repro.core import (CostEstimator, SearchConfig, SearchEngine,
+                            generate_training_data)
+    from repro.data import make_dataset, make_label_workload, make_range_workload
+    from repro.filters.predicates import PRED_CONTAIN, PRED_RANGE
+    from repro.index import build_graph_index
+
+    ds = make_dataset(n=corpus, dim=48, n_clusters=16, alphabet_size=48,
+                      seed=seed)
+    graph = build_graph_index(ds.vectors, degree=24, seed=seed)
+    engine = SearchEngine.build(ds, graph, backend=backend)
+    cfg = SearchConfig(k=k, queue_size=queue_size, pred_kind=PRED_CONTAIN)
+
+    half = train_queries // 2
+    feats, w_q = [], []
+    for kind, pred in (("contain", PRED_CONTAIN), ("range", PRED_RANGE)):
+        wl = (make_label_workload(ds, batch=half, kind=kind, seed=7)
+              if kind == "contain" else
+              make_range_workload(ds, batch=half, seed=8))
+        td = generate_training_data(
+            engine, ds, wl, dataclasses.replace(cfg, pred_kind=pred),
+            probe_budget=probe, chunk=128)
+        feats.append(td.features)
+        w_q.append(td.w_q)
+    est = CostEstimator.fit(np.concatenate(feats), np.concatenate(w_q),
+                            n_trees=120, depth=5)
+    return ds, graph, engine, cfg, est
+
+
+def mixed_requests(ds, n: int, seed: int = 100, hard_fraction: float = 0.5):
+    """Interleaved contain/range requests (heterogeneous difficulty)."""
+    from repro.data import make_label_workload, make_range_workload
+    from repro.serve import requests_from_workload
+
+    wl_c = make_label_workload(ds, batch=(n + 1) // 2, kind="contain",
+                               hard_fraction=hard_fraction, seed=seed)
+    wl_r = make_range_workload(ds, batch=n // 2,
+                               hard_fraction=hard_fraction, seed=seed + 1)
+    reqs = (requests_from_workload(wl_c, start_rid=0)
+            + requests_from_workload(wl_r, start_rid=wl_c.batch))
+    rng = np.random.default_rng(seed)
+    rng.shuffle(reqs)
+    return reqs
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="olmo-1b")
     ap.add_argument("--requests", type=int, default=64)
-    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=16,
+                    help="micro-batch lane width")
     ap.add_argument("--alpha", type=float, default=1.5)
-    ap.add_argument("--gen-len", type=int, default=8)
-    ap.add_argument("--corpus", type=int, default=8000)
+    ap.add_argument("--buckets", default="256,1024,4096",
+                    help="ascending NDC bucket caps (a final unbounded "
+                         "bucket is always appended)")
+    ap.add_argument("--policy", default="direct",
+                    choices=["direct", "escalate"])
+    ap.add_argument("--probe", type=int, default=64)
+    ap.add_argument("--queue-capacity", type=int, default=None,
+                    help="admission bound; default admits the whole "
+                         "--requests stream (pass a smaller value to "
+                         "demonstrate load shedding)")
+    ap.add_argument("--corpus", type=int, default=6000)
+    ap.add_argument("--train-queries", type=int, default=256)
+    ap.add_argument("--queue-size", type=int, default=128,
+                    help="search beam width M")
+    ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--gen-len", type=int, default=0,
+                    help="decode this many tokens per request with a tiny "
+                         "LM over the retrieved ids (0 = retrieval only)")
+    ap.add_argument("--arch", default="olmo-1b")
     args = ap.parse_args()
 
+    from repro.serve import CostAwareScheduler, ServeConfig
+
+    print("== index + estimator bring-up")
+    ds, graph, engine, cfg, est = build_world(
+        args.corpus, args.train_queries, args.queue_size, args.k, args.probe,
+        backend=os.environ.get("REPRO_BACKEND", "pallas"))
+
+    buckets = tuple(int(x) for x in args.buckets.split(",") if x) + (None,)
+    # the launcher submits the whole stream before pumping, so the default
+    # admission bound must cover it — otherwise an idle system sheds load
+    capacity = (args.queue_capacity if args.queue_capacity is not None
+                else max(512, args.requests))
+    scfg = ServeConfig(lane_width=args.batch, buckets=buckets,
+                       policy=args.policy, probe_budget=args.probe,
+                       alpha=args.alpha, queue_capacity=capacity)
+    sched = CostAwareScheduler(engine, est, cfg, scfg)
+
+    print(f"== serving {args.requests} mixed contain/range requests "
+          f"(lanes={args.batch}, buckets={buckets}, policy={args.policy})")
+    reqs = mixed_requests(ds, args.requests)
+    t0 = time.perf_counter()
+    for r in reqs:
+        sched.submit(r, time.perf_counter() - t0)
+    sched.run_until_idle(time.perf_counter() - t0)
+
+    s = sched.summary()
+    lat, ndc = s["latency"], s["ndc"]
+    print(f"retrieval: p50/p95/p99 = {1e3*lat['p50']:.1f}/"
+          f"{1e3*lat['p95']:.1f}/{1e3*lat['p99']:.1f} ms  "
+          f"NDC p50/p95/p99 = {ndc['p50']:.0f}/{ndc['p95']:.0f}/"
+          f"{ndc['p99']:.0f}")
+    print(f"batches={s['n_batches']} requeues={s['n_requeues']} "
+          f"shed={s['n_shed']} cache_hit_rate="
+          f"{s['cache']['hit_rate']:.2f} queue_depth_max="
+          f"{s['queue_depth_max']}")
+
+    if args.gen_len > 0:
+        _generate(args, reqs)
+
+
+def _generate(args, reqs):
+    """Filtered-RAG tail: retrieved ids condition a tiny decoder LM."""
     import jax
     import jax.numpy as jnp
 
     from repro.configs import get_arch
-    from repro.core import (CostEstimator, SearchConfig, SearchEngine,
-                            e2e_search, generate_training_data)
-    from repro.data import make_dataset, make_label_workload
-    from repro.distributed.fault_tolerance import clamp_budgets
-    from repro.filters.predicates import PRED_CONTAIN
-    from repro.index import build_graph_index
     from repro.models import build_model, split_tree
     from repro.models.transformer import _pad_cache_seq
-
-    print("== index + estimator bring-up")
-    ds = make_dataset(n=args.corpus, dim=48, n_clusters=16, alphabet_size=48,
-                      seed=0)
-    graph = build_graph_index(ds.vectors, degree=24, seed=0)
-    engine = SearchEngine.build(ds, graph,
-                                backend=os.environ.get("REPRO_BACKEND", "pallas"))
-    cfg = SearchConfig(k=4, queue_size=256, pred_kind=PRED_CONTAIN)
-    wl_tr = make_label_workload(ds, batch=384, kind="contain", seed=7)
-    td = generate_training_data(engine, ds, wl_tr, cfg, probe_budget=64,
-                                chunk=128)
-    est = CostEstimator.fit(td.features, td.w_q, n_trees=150, depth=5)
 
     mcfg = get_arch(args.arch).tiny()
     model = build_model(mcfg)
@@ -58,43 +157,27 @@ def main():
     prefill = jax.jit(model.prefill)
     decode = jax.jit(model.decode_step)
 
-    print(f"== serving {args.requests} requests in batches of {args.batch}")
-    lat_ret, lat_gen, ndcs, clamped_total = [], [], [], 0
-    for s in range(0, args.requests, args.batch):
-        b = min(args.batch, args.requests - s)
-        wl = make_label_workload(ds, batch=b, kind="contain", seed=100 + s)
-        t0 = time.perf_counter()
-        r = e2e_search(engine, est, cfg, wl.queries, wl.spec, probe_budget=64,
-                       alpha=args.alpha)
-        budgets, flagged = clamp_budgets(r.predicted_budget, quantile=0.95)
-        clamped_total += int(flagged.sum())
-        lat_ret.append(time.perf_counter() - t0)
-        ndcs.extend(np.asarray(r.state.cnt).tolist())
-
-        doc_ids = np.abs(np.asarray(r.state.res_idx)) % mcfg.vocab_size
-        prompts = np.random.default_rng(s).integers(
-            0, mcfg.vocab_size, (b, 8))
-        tokens = jnp.asarray(np.concatenate([doc_ids, prompts], axis=1),
-                             jnp.int32)
-        t0 = time.perf_counter()
-        logits, part = prefill(prm, {"tokens": tokens})
-        cache, _ = split_tree(model.init_cache(b, tokens.shape[1] + args.gen_len))
-        cache = _pad_cache_seq(cache, part)
+    done = [r for r in reqs if r.res_idx is not None]
+    if not done:
+        print("generation: skipped (no served requests)")
+        return
+    b = len(done)
+    doc_ids = np.stack([np.abs(r.res_idx) % mcfg.vocab_size for r in done])
+    prompts = np.random.default_rng(0).integers(0, mcfg.vocab_size, (b, 8))
+    tokens = jnp.asarray(np.concatenate([doc_ids, prompts], axis=1),
+                         jnp.int32)
+    t0 = time.perf_counter()
+    logits, part = prefill(prm, {"tokens": tokens})
+    cache, _ = split_tree(model.init_cache(b, tokens.shape[1] + args.gen_len))
+    cache = _pad_cache_seq(cache, part)
+    cur = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(jnp.int32)
+    pos = jnp.full((b,), tokens.shape[1], jnp.int32)
+    for t in range(args.gen_len - 1):
+        logits, cache = decode(prm, cache, cur, pos + t, None)
         cur = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(jnp.int32)
-        pos = jnp.full((b,), tokens.shape[1], jnp.int32)
-        for t in range(args.gen_len - 1):
-            logits, cache = decode(prm, cache, cur, pos + t, None)
-            cur = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(jnp.int32)
-        jax.block_until_ready(cur)
-        lat_gen.append(time.perf_counter() - t0)
-
-    ndcs = np.asarray(ndcs)
-    print(f"retrieval: {1e3*np.mean(lat_ret)/args.batch:.1f} ms/req  "
-          f"NDC p50/p95/p99 = {np.percentile(ndcs, 50):.0f}/"
-          f"{np.percentile(ndcs, 95):.0f}/{np.percentile(ndcs, 99):.0f}  "
-          f"clamped(hard-requeue)={clamped_total}")
-    print(f"generation: {1e3*np.mean(lat_gen)/args.batch:.1f} ms/req "
-          f"({args.gen_len} tokens)")
+    jax.block_until_ready(cur)
+    dt = time.perf_counter() - t0
+    print(f"generation: {1e3*dt/b:.1f} ms/req ({args.gen_len} tokens)")
 
 
 if __name__ == "__main__":

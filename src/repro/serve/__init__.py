@@ -1,0 +1,21 @@
+# Cost-aware serving subsystem: the paper's adaptive-termination signal
+# (predicted budget Ŵ_q) used as a scheduling signal — admission control,
+# fixed-shape micro-batching, budget-bucketed batch formation, and
+# resume-based preemption over the lockstep engine.
+from repro.serve.queue import AdmissionQueue, Request, requests_from_workload
+from repro.serve.batcher import MicroBatcher
+from repro.serve.cache import ResultCache, request_key
+from repro.serve.metrics import ServeMetrics
+from repro.serve.scheduler import CostAwareScheduler, ServeConfig
+
+__all__ = [
+    "AdmissionQueue",
+    "Request",
+    "requests_from_workload",
+    "MicroBatcher",
+    "ResultCache",
+    "request_key",
+    "ServeMetrics",
+    "CostAwareScheduler",
+    "ServeConfig",
+]

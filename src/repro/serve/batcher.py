@@ -1,0 +1,199 @@
+"""Micro-batcher: fixed-shape lanes + budget-bucketed batch formation.
+
+Two jobs, both about feeding a jitted lockstep engine from a ragged request
+stream:
+
+**Fixed-shape lanes.** `run_search` recompiles per batch shape, so every
+micro-batch is padded to exactly `lane_width` lanes — one compile per
+(predicate kind, phase) for the whole serving session. Pad lanes carry
+all-zero queries/filters/states and a 0 NDC budget, so they deactivate on
+their first step; the engine's shard path uses the same invariant.
+
+**Budget buckets.** After the shared probe phase every request owns a
+predicted budget Ŵ_q. In a lockstep batch the wall time is set by the
+*largest* lane budget — mixing a Ŵ=8000 request into a batch of Ŵ=150
+requests makes the easy lanes pay 50× their own cost (the batch-tail
+misalignment of paper Fig. 3, recreated at serving level). The batcher
+therefore keeps one FIFO queue per budget bucket (ascending NDC caps, last
+unbounded) and forms batches within a bucket, so batchmates always have
+comparable remaining work. A request whose Ŵ_q exceeds its bucket's cap
+runs a bounded time slice and is requeued one bucket up with its carried
+`SearchState` (the scheduler's preemption path) — no batch ever runs past
+its bucket's budget.
+
+Opportunistic fill: when a bucket batch has spare lanes, requests waiting in
+*higher* buckets may ride along for a time slice capped at this bucket's
+budget. They make bounded progress without extending the batch (their lane
+budget is clamped to the cap) and are requeued upward afterwards.
+"""
+from __future__ import annotations
+
+from collections import deque
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.state import concat_lanes, pad_lanes, take_lanes
+from repro.serve.queue import Request, batch_spec, take_kind
+
+
+class MicroBatcher:
+    def __init__(self, lane_width: int = 16,
+                 buckets: tuple = (256, 1024, 4096, None),
+                 fill: bool = True):
+        if buckets[-1] is not None:
+            buckets = tuple(buckets) + (None,)
+        caps = [c for c in buckets[:-1]]
+        if any(b >= a for a, b in zip(caps[1:], caps[:-1])):
+            raise ValueError(f"bucket caps must be ascending: {buckets}")
+        self.lane_width = lane_width
+        # A short ladder of lane widths bounds jit shapes while letting a
+        # partial batch run at its natural width: on CPU/GPU the lockstep
+        # per-step cost scales ~linearly with lane count, so an 8-wide
+        # survivor batch costs half a 16-wide one — which is what makes
+        # budget buckets cheaper than one tail-bound batch, not free lanes.
+        self.lane_widths = tuple(sorted({max(1, lane_width // 4),
+                                         max(1, lane_width // 2),
+                                         lane_width}))
+        self.buckets = tuple(buckets)
+        self.fill = fill
+        self._queues: list[deque[Request]] = [deque() for _ in buckets]
+
+    def width_for(self, n: int) -> int:
+        """Smallest configured lane width that fits `n` requests."""
+        for w in self.lane_widths:
+            if n <= w:
+                return w
+        return self.lane_width
+
+    # ------------------------------------------------------------- routing ----
+    def bucket_of(self, budget: int) -> int:
+        """Smallest bucket whose cap covers `budget` (deterministic)."""
+        for i, cap in enumerate(self.buckets):
+            if cap is None or budget <= cap:
+                return i
+        raise AssertionError("unreachable: last bucket is unbounded")
+
+    def enqueue(self, req: Request, bucket: int | None = None) -> int:
+        """Queue a probed request; default routing is by its predicted
+        budget, an explicit index supports the escalate policy's requeues.
+
+        Queues are kept ordered by arrival: a requeued request (rider or
+        escalated slice) carries its original arrival and must sit ahead of
+        newer work, or the oldest-head dispatch rule and the batch_wait gate
+        would under-serve exactly the hard-tail requests being time-sliced.
+        Fresh submissions arrive in order, so the scan is O(1) for them."""
+        i = self.bucket_of(req.budget) if bucket is None else bucket
+        q = self._queues[i]
+        if q and q[-1].arrival > req.arrival:
+            pos = len(q)
+            while pos > 0 and q[pos - 1].arrival > req.arrival:
+                pos -= 1
+            q.insert(pos, req)
+        else:
+            q.append(req)
+        return i
+
+    def depth(self) -> int:
+        return sum(len(q) for q in self._queues)
+
+    def head_arrival(self) -> float | None:
+        heads = [q[0].arrival for q in self._queues if q]
+        return min(heads) if heads else None
+
+    def bucket_heads(self) -> list[tuple[float, int, int]]:
+        """(head arrival, bucket index, head-kind batchable count) per
+        non-empty bucket — the scheduler's dispatch-gating view."""
+        out = []
+        for i, q in enumerate(self._queues):
+            if q:
+                kind = q[0].kind
+                n = sum(1 for r in q if r.kind == kind)
+                out.append((q[0].arrival, i, n))
+        return out
+
+    # ------------------------------------------------------- batch forming ----
+    def form_batch(self, bucket: int | None = None,
+                   ) -> tuple[int, list[Request], int | None]:
+        """Pop a same-kind batch of up to lane_width requests from `bucket`
+        (default: the non-empty bucket with the oldest head — FIFO-fair
+        across buckets). Returns (bucket index, requests, cap); requests is
+        [] when idle."""
+        live = [i for i, q in enumerate(self._queues) if q]
+        if not live:
+            return -1, [], None
+        i = (min(live, key=lambda j: self._queues[j][0].arrival)
+             if bucket is None else bucket)
+        reqs = take_kind(self._queues[i], None, self.lane_width)
+        cap = self.buckets[i]
+        if not reqs:                  # explicitly-named bucket was empty
+            return i, [], cap
+        fill_to = self.width_for(len(reqs))
+        if self.fill and len(reqs) < fill_to and cap is not None:
+            # Riders take only the PAD lanes of the batch's natural ladder
+            # width — widening the batch would make the resident requests
+            # pay the riders' per-step cost (per-step cost scales with lane
+            # width). Within the natural width they are free, resume-exact
+            # progress, clamped to this bucket's cap. Eligibility requires
+            # executed < cap: a rider that already reached this cap in an
+            # earlier slice would be a no-op lane (dispatch cost, no
+            # progress).
+            kind = reqs[0].kind
+            for j in range(i + 1, len(self._queues)):
+                if len(reqs) == fill_to:
+                    break
+                reqs += take_kind(self._queues[j], kind,
+                                  fill_to - len(reqs),
+                                  pred=lambda r: r.executed < cap)
+        return i, reqs, cap
+
+    # ----------------------------------------------------------- assembly ----
+    # `width=None` pads to the full lane_width; the scheduler passes
+    # width_for(len(requests)) so partial batches run at their natural
+    # (cheaper) shape.
+
+    def pad_queries(self, requests: list[Request],
+                    width: int | None = None) -> jnp.ndarray:
+        width = self.lane_width if width is None else width
+        q = np.stack([r.query for r in requests]).astype(np.float32)
+        return jnp.asarray(np.pad(q, ((0, width - len(requests)), (0, 0))))
+
+    def pad_spec(self, requests: list[Request], width: int | None = None):
+        return batch_spec(requests,
+                          self.lane_width if width is None else width)
+
+    def pad_budgets(self, requests: list[Request], cap: int | None,
+                    width: int | None = None) -> jnp.ndarray:
+        """Per-lane budget targets: Ŵ_q clamped to the bucket cap; pad lanes
+        get 0 and deactivate immediately."""
+        b = np.zeros(self.lane_width if width is None else width, np.int32)
+        for i, r in enumerate(requests):
+            b[i] = r.budget if cap is None else min(r.budget, cap)
+        return jnp.asarray(b)
+
+    def pad_states(self, requests: list[Request],
+                   width: int | None = None):
+        """Assemble the carried states into one [lane_width, ...] batch
+        state (zero states on pad lanes are inert under 0 budget).
+
+        A request's `state` is a (batch SearchState, lane index) reference
+        into the batch it last rode in — lanes are gathered here *per source
+        batch* rather than sliced per request, which keeps the device-op
+        count per assembled batch at a few× the leaf count instead of
+        lanes× the leaf count (per-lane slicing dominated scheduler
+        overhead on CPU)."""
+        groups: dict[int, list] = {}
+        for pos, r in enumerate(requests):
+            st, lane = r.state
+            groups.setdefault(id(st), [st, [], []])
+            groups[id(st)][1].append(lane)
+            groups[id(st)][2].append(pos)
+        parts = [take_lanes(st, lanes) for st, lanes, _ in groups.values()]
+        merged = parts[0] if len(parts) == 1 else concat_lanes(parts)
+        order = [p for _, _, ps in groups.values() for p in ps]
+        if order != list(range(len(order))):
+            inv = np.empty(len(order), np.int32)
+            inv[order] = np.arange(len(order), dtype=np.int32)
+            merged = take_lanes(merged, inv)
+        width = self.lane_width if width is None else width
+        return pad_lanes(merged, width - len(requests))

@@ -1,0 +1,71 @@
+"""Per-(query, filter-spec) result cache.
+
+Keys are SHA-1 digests over the *full byte content* of the query vector and
+the filter, plus the predicate kind tag and every search parameter that
+changes the answer (k, queue size, traversal mode/backend-independent α,
+probe budget). Hashing the raw bytes — not a lossy summary like a mask
+popcount or a range width — is what makes the cache safe under filter-spec
+collisions: a contain mask and an equal mask with identical words, or a
+range whose (lo, hi) float bytes happen to equal a mask's bytes, still map
+to distinct keys because the kind tag is part of the preimage.
+"""
+from __future__ import annotations
+
+import hashlib
+from collections import OrderedDict
+
+import numpy as np
+
+
+def request_key(req, k: int, queue_size: int, alpha: float,
+                probe_budget: int, min_budget: int = 32,
+                max_budget: int = 1 << 30, n_probes: int = 2,
+                ablate_filter: bool = False) -> str:
+    h = hashlib.sha1()
+    h.update(np.ascontiguousarray(req.query, np.float32).tobytes())
+    h.update(b"|kind:%d" % req.kind)
+    if req.label_mask is not None:
+        h.update(b"|mask:")
+        h.update(np.ascontiguousarray(req.label_mask, np.uint32).tobytes())
+    if req.range_lo is not None:
+        h.update(b"|range:")
+        h.update(np.asarray([req.range_lo, req.range_hi], np.float32).tobytes())
+    h.update(b"|k:%d|m:%d|a:%r|f:%d|lo:%d|hi:%d|np:%d|abl:%d"
+             % (k, queue_size, alpha, probe_budget, min_budget, max_budget,
+                n_probes, ablate_filter))
+    return h.hexdigest()
+
+
+class ResultCache:
+    """LRU cache of completed results (res_idx, res_dist, ndc)."""
+
+    def __init__(self, capacity: int = 4096):
+        self.capacity = capacity
+        self._d: OrderedDict[str, tuple] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def get(self, key: str):
+        hit = self._d.get(key)
+        if hit is None:
+            self.misses += 1
+            return None
+        self._d.move_to_end(key)
+        self.hits += 1
+        return hit
+
+    def put(self, key: str, res_idx: np.ndarray, res_dist: np.ndarray,
+            ndc: int) -> None:
+        self._d[key] = (np.asarray(res_idx).copy(),
+                        np.asarray(res_dist).copy(), int(ndc))
+        self._d.move_to_end(key)
+        while len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0

@@ -1,0 +1,113 @@
+"""Serving metrics: latency percentiles, NDC histogram, queue depth, cache.
+
+One record per completed request plus periodic queue-depth samples; the
+summary feeds the `BENCH_serve.json` artifact (see benchmarks/serve_bench.py)
+and the `launch/serve.py` report. Times are in whatever unit the driving
+clock uses (seconds for the real-clock launcher and the simulated bench).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from functools import partial
+
+import numpy as np
+
+# Retention caps: a long-lived serving process must not grow memory without
+# bound, so per-request / per-batch observations are sliding windows (the
+# aggregate counters n_batches / busy_time stay exact for the full
+# lifetime). At serving rates that fill these windows, the percentiles in
+# summary() describe the most recent traffic — which is what an operator
+# wants from a live system anyway.
+MAX_RECORDS = 1 << 17
+MAX_SAMPLES = 1 << 16
+
+
+@dataclasses.dataclass
+class ServeMetrics:
+    records: deque = dataclasses.field(
+        default_factory=partial(deque, maxlen=MAX_RECORDS))
+    depth_samples: deque = dataclasses.field(
+        default_factory=partial(deque, maxlen=MAX_SAMPLES))
+    batches: deque = dataclasses.field(
+        default_factory=partial(deque, maxlen=MAX_SAMPLES))
+    n_batches: int = 0
+    n_completed: int = 0
+    busy_time: float = 0.0
+
+    def observe_batch(self, phase: str, size: int, fill: int,
+                      busy: float, steps: int = 0) -> None:
+        self.n_batches += 1
+        self.busy_time += busy
+        self.batches.append(dict(phase=phase, size=size, lanes=fill,
+                                 busy=busy, steps=steps))
+
+    def observe_depth(self, now: float, depth: int) -> None:
+        self.depth_samples.append((now, depth))
+
+    def complete(self, req) -> None:
+        self.n_completed += 1
+        self.records.append(dict(
+            rid=req.rid,
+            latency=(req.completed - req.arrival),
+            probe_latency=(None if req.probe_done is None
+                           else req.probe_done - req.arrival),
+            ndc=req.ndc,
+            budget=req.budget,
+            n_slices=req.n_slices,
+            cache_hit=req.cache_hit,
+            deadline_missed=(req.deadline is not None
+                            and req.completed > req.deadline),
+        ))
+
+    # ------------------------------------------------------------ summary ----
+    def _percentiles(self, values, qs=(50, 95, 99)) -> dict:
+        if not len(values):
+            return {f"p{q}": 0.0 for q in qs}
+        return {f"p{q}": float(np.percentile(values, q)) for q in qs}
+
+    def summary(self, n_shed: int = 0, n_expired: int = 0,
+                cache=None) -> dict:
+        lat = np.asarray([r["latency"] for r in self.records], np.float64)
+        plat = np.asarray([r["probe_latency"] for r in self.records
+                           if r.get("probe_latency") is not None], np.float64)
+        ndc = np.asarray([r["ndc"] for r in self.records
+                          if r["ndc"] is not None], np.float64)
+        hist, edges = (np.histogram(ndc, bins=8) if len(ndc)
+                       else (np.zeros(8, int), np.zeros(9)))
+        depth = np.asarray([d for _, d in self.depth_samples], np.float64)
+        by_phase = {}
+        for b in self.batches:
+            d = by_phase.setdefault(b["phase"],
+                                    dict(n=0, busy=0.0, size=0))
+            d["n"] += 1
+            d["busy"] += b["busy"]
+            d["size"] += b["size"]
+        for d in by_phase.values():
+            d["mean_fill"] = d.pop("size") / d["n"]
+            d["busy"] = round(d["busy"], 4)
+        out = dict(
+            n_completed=self.n_completed,
+            n_batches=self.n_batches,
+            busy_time=float(self.busy_time),
+            batches_by_phase=by_phase,
+            latency=self._percentiles(lat),
+            latency_mean=float(lat.mean()) if len(lat) else 0.0,
+            probe_latency=self._percentiles(plat),
+            ndc=self._percentiles(ndc),
+            ndc_hist=dict(counts=hist.tolist(),
+                          edges=[float(e) for e in edges]),
+            queue_depth_mean=float(depth.mean()) if len(depth) else 0.0,
+            queue_depth_max=int(depth.max()) if len(depth) else 0,
+            n_shed=int(n_shed),
+            n_expired=int(n_expired),
+            n_requeues=int(sum(max(0, r["n_slices"] - 1)
+                               for r in self.records)),
+            deadline_miss_rate=(float(np.mean([r["deadline_missed"]
+                                               for r in self.records]))
+                                if self.records else 0.0),
+        )
+        if cache is not None:
+            out["cache"] = dict(hits=cache.hits, misses=cache.misses,
+                                hit_rate=cache.hit_rate, entries=len(cache))
+        return out

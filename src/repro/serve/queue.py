@@ -1,0 +1,140 @@
+"""Request model + admission layer (serving lifecycle stage 1).
+
+A `Request` is one (query vector, filter) pair with an arrival timestamp and
+an optional latency deadline. The `AdmissionQueue` is the system's only
+*bounded* queue: it sheds load when full (backpressure — the caller gets a
+`False` and is expected to retry/degrade upstream) and rejects requests whose
+deadline already expired on arrival. Everything behind admission (bucket
+queues) is unbounded: admitted work is always finished.
+
+Timestamps are plain floats in caller-defined units. The scheduler never
+reads a wall clock itself — `launch/serve.py` feeds `time.perf_counter()`
+deltas, while `benchmarks/serve_bench.py` feeds a simulated open-loop clock
+driven by measured service times. Both exercise identical scheduling code.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+from repro.filters.predicates import FilterSpec, PRED_RANGE
+
+
+@dataclasses.dataclass
+class Request:
+    """One filtered-AKNN request plus its scheduling lifecycle state."""
+
+    rid: int
+    query: np.ndarray                 # [d] float32
+    kind: int                         # predicate tag (static per request)
+    label_mask: np.ndarray | None = None   # [W] uint32 (label predicates)
+    range_lo: float | None = None          # (range predicate)
+    range_hi: float | None = None
+    arrival: float | None = None      # stamped at submit() when unset
+    deadline: float | None = None     # absolute time; None = best-effort
+
+    # -- lifecycle, owned by the scheduler --
+    state: tuple | None = None        # carried traversal state: a (batch
+                                      # SearchState, lane index) reference
+                                      # into the micro-batch it last rode in
+    budget: int | None = None         # Ŵ_q once estimated
+    executed: int = 0                 # budget target reached so far
+    n_slices: int = 0                 # resume batches this request rode in
+    probe_done: float | None = None
+    completed: float | None = None
+    cache_hit: bool = False
+    res_idx: np.ndarray | None = None  # [k] final top-k ids
+    res_dist: np.ndarray | None = None
+    ndc: int | None = None
+
+
+def requests_from_workload(wl, start_rid: int = 0, arrivals=None,
+                           deadline: float | None = None) -> list[Request]:
+    """Explode a batched QueryWorkload into per-request objects."""
+    out = []
+    for i in range(wl.batch):
+        kind = wl.spec.kind
+        if kind == PRED_RANGE:
+            req = Request(rid=start_rid + i, query=wl.queries[i], kind=kind,
+                          range_lo=float(wl.spec.range_lo[i]),
+                          range_hi=float(wl.spec.range_hi[i]))
+        else:
+            req = Request(rid=start_rid + i, query=wl.queries[i], kind=kind,
+                          label_mask=np.asarray(wl.spec.label_masks[i]))
+        if arrivals is not None:
+            req.arrival = float(arrivals[i])
+        if deadline is not None:
+            if arrivals is None:
+                raise ValueError("a relative deadline requires explicit "
+                                 "arrivals")
+            req.deadline = float(arrivals[i]) + deadline
+        out.append(req)
+    return out
+
+
+def batch_spec(requests: list[Request], pad_to: int) -> FilterSpec:
+    """Stack single-request filters (all the same kind) into a padded batch
+    spec. Pad lanes get all-zero filters — they are inert because the batcher
+    assigns them a 0 NDC budget."""
+    kind = requests[0].kind
+    pad = pad_to - len(requests)
+    assert pad >= 0 and all(r.kind == kind for r in requests)
+    if kind == PRED_RANGE:
+        lo = np.asarray([r.range_lo for r in requests], np.float32)
+        hi = np.asarray([r.range_hi for r in requests], np.float32)
+        return FilterSpec(kind, None, np.pad(lo, (0, pad)), np.pad(hi, (0, pad)))
+    masks = np.stack([r.label_mask for r in requests]).astype(np.uint32)
+    return FilterSpec(kind, np.pad(masks, ((0, pad), (0, 0))), None, None)
+
+
+def take_kind(q: deque, kind: int | None, limit: int, pred=None,
+              ) -> list[Request]:
+    """Pop up to `limit` same-kind requests from a deque, preserving FIFO
+    order within the kind (the traversal config is static per predicate
+    kind, so a micro-batch cannot mix kinds). kind=None adopts the first
+    eligible request's kind; `pred` optionally restricts eligibility.
+    Shared by the admission queue and the bucket batcher — the
+    pull-from-anywhere-FIFO invariant lives in exactly one place."""
+    taken, kept = [], deque()
+    while q:
+        r = q.popleft()
+        if (len(taken) < limit and (kind is None or r.kind == kind)
+                and (pred is None or pred(r))):
+            taken.append(r)
+            kind = r.kind
+        else:
+            kept.append(r)
+    q.extend(kept)
+    return taken
+
+
+class AdmissionQueue:
+    """Bounded FIFO ingress with deadline-aware admission control."""
+
+    def __init__(self, capacity: int = 256):
+        self.capacity = capacity
+        self._q: deque[Request] = deque()
+        self.n_shed = 0        # rejected: queue full (backpressure)
+        self.n_expired = 0     # rejected: deadline already passed
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def head_arrival(self) -> float | None:
+        return self._q[0].arrival if self._q else None
+
+    def offer(self, req: Request, now: float) -> bool:
+        if req.deadline is not None and now > req.deadline:
+            self.n_expired += 1
+            return False
+        if len(self._q) >= self.capacity:
+            self.n_shed += 1
+            return False
+        self._q.append(req)
+        return True
+
+    def take_kind_group(self, limit: int) -> list[Request]:
+        """Pop up to `limit` requests sharing the head's predicate kind."""
+        return take_kind(self._q, None, limit)

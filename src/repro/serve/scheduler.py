@@ -1,0 +1,295 @@
+"""Cost-aware scheduler: probe → estimate → bucket → resume/requeue.
+
+Turns the paper's per-query cost signal Ŵ_q into *system* behavior. The
+request lifecycle:
+
+  admit      bounded AdmissionQueue (backpressure + deadline checks), with a
+             result-cache lookup in front
+  probe      micro-batch of same-predicate requests runs the shared early
+             probe (the first f NDCs of the real traversal — identical code
+             path to `e2e_search`)
+  estimate   GBDT on probe features → Ŵ_q per request (`predict_budgets`,
+             the exact stage-2 path of the one-shot pipeline)
+  bucket     requests routed to budget buckets; each request carries its
+             live per-lane `SearchState` out of the probe batch
+  resume     a bucket batch resumes its lanes with budget min(Ŵ_q, cap) —
+             batchmates always have comparable remaining work, so no easy
+             lane ever waits on a batch tail
+  requeue    lanes with Ŵ_q > cap ran a bounded time slice; their carried
+             state is requeued one bucket up (preemption). Because the
+             traversal is resume-exact, the final top-k is bit-identical to
+             a one-shot `e2e_search` at the same α no matter how the work
+             was sliced (tests/test_serve.py pins this).
+
+The scheduler is clock-agnostic: callers pass `now` into submit()/pump() and
+service time is measured with the injected `timer` around real engine work.
+`launch/serve.py` drives it with a wall clock; `benchmarks/serve_bench.py`
+drives an open-loop simulated clock off the measured service times.
+
+Routing policies:
+  direct    (default) each probed request goes to the smallest bucket whose
+            cap covers Ŵ_q — one resume slice unless it rode an
+            opportunistic fill.
+  escalate  multilevel-feedback: every request starts in the shortest
+            bucket and climbs on requeue — hard queries are time-sliced,
+            which bounds every batch's wall time at the cost of extra
+            slices (useful when the estimator's tail is untrusted).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.e2e import predict_budgets, probe_and_features
+from repro.core.engine import SearchEngine
+from repro.core.search import SearchConfig
+from repro.serve.batcher import MicroBatcher
+from repro.serve.cache import ResultCache, request_key
+from repro.serve.metrics import ServeMetrics
+from repro.serve.queue import AdmissionQueue, Request
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeConfig:
+    lane_width: int = 16
+    buckets: tuple = (256, 1024, 4096, None)
+    policy: str = "direct"           # "direct" | "escalate"
+    fill: bool = True                # opportunistic fill of spare lanes
+    queue_capacity: int = 256
+    batch_wait: float = 0.0          # dispatch a partial batch only after
+                                     # its head waited this long (0 = eager)
+    probe_budget: int = 64
+    n_probes: int = 2
+    alpha: float = 1.5
+    min_budget: int = 32
+    max_budget: int = 1 << 30
+    ablate_filter: bool = False
+    cache_capacity: int = 4096       # 0 disables the result cache
+
+
+class CostAwareScheduler:
+    def __init__(self, engine: SearchEngine, estimator, cfg: SearchConfig,
+                 serve_cfg: ServeConfig = ServeConfig(),
+                 timer=time.perf_counter, service_model=None):
+        """service_model: optional callable (trip count, lane width) →
+        seconds. When set, pump() charges batches by the model instead of
+        the wall clock — a calibrated virtual clock that makes scheduling
+        simulations deterministic on machines whose speed drifts (see
+        benchmarks/serve_bench.py). Real engine work still runs either way;
+        only the *charged* service time differs."""
+        if serve_cfg.policy not in ("direct", "escalate"):
+            raise ValueError(f"unknown policy {serve_cfg.policy!r}")
+        self.engine = engine
+        self.service_model = service_model
+        self.estimator = estimator
+        self.cfg = cfg
+        self.scfg = serve_cfg
+        self.timer = timer
+        self.ingress = AdmissionQueue(serve_cfg.queue_capacity)
+        self.batcher = MicroBatcher(serve_cfg.lane_width, serve_cfg.buckets,
+                                    serve_cfg.fill)
+        self.cache = (ResultCache(serve_cfg.cache_capacity)
+                      if serve_cfg.cache_capacity else None)
+        self.metrics = ServeMetrics()
+        self._packed = estimator.packed()  # GBDT forest, packed once
+
+    # ------------------------------------------------------------- ingress ----
+    def _key(self, req: Request) -> str:
+        s = self.scfg
+        return request_key(req, self.cfg.k, self.cfg.queue_size, s.alpha,
+                           s.probe_budget, s.min_budget, s.max_budget,
+                           s.n_probes, s.ablate_filter)
+
+    def submit(self, req: Request, now: float) -> str:
+        """Returns "hit" | "queued" | "shed" | "expired"."""
+        req.arrival = now if req.arrival is None else req.arrival
+        if self.cache is not None:
+            hit = self.cache.get(self._key(req))
+            if hit is not None:
+                req.res_idx, req.res_dist, req.ndc = hit
+                req.cache_hit = True
+                req.completed = now
+                self.metrics.complete(req)
+                return "hit"
+        if not self.ingress.offer(req, now):
+            return "expired" if (req.deadline is not None
+                                 and now > req.deadline) else "shed"
+        return "queued"
+
+    def has_work(self) -> bool:
+        return bool(len(self.ingress) or self.batcher.depth())
+
+    def depth(self) -> int:
+        return len(self.ingress) + self.batcher.depth()
+
+    # --------------------------------------------------------------- pump ----
+    def _dispatchable(self, now: float):
+        """All queues holding work, as (head arrival, target) where target
+        is "probe" or a bucket index — filtered by the batching gate: a
+        batch dispatches when it can fill its lanes or when its head has
+        waited `batch_wait` (anti-fragmentation: padded lanes cost the same
+        lockstep compute as real ones, so eagerly dispatching slim batches
+        shreds throughput)."""
+        heads = []
+        if len(self.ingress):
+            # probe batches are never gated: a probe costs probe_budget NDC
+            # per lane (≪ any bucket cap), so slim probe batches are cheap,
+            # and eager probing routes work into buckets sooner — which is
+            # what fills the expensive batches
+            heads.append((self.ingress.head_arrival(), "probe",
+                          self.batcher.lane_width))
+        for arrival, i, n in self.batcher.bucket_heads():
+            heads.append((arrival, i, n))
+        ready = [(a, t) for a, t, n in heads
+                 if n >= self.batcher.lane_width
+                 or now - a >= self.scfg.batch_wait]
+        return ready, heads
+
+    def next_deadline(self) -> float | None:
+        """Earliest time a currently-gated batch becomes dispatchable (the
+        driver's idle-advance target); None when no work is queued."""
+        _, heads = self._dispatchable(float("inf"))
+        if not heads:
+            return None
+        return min(a for a, _, _ in heads) + self.scfg.batch_wait
+
+    def pump(self, now: float) -> tuple[list[Request], float]:
+        """Execute one micro-batch: among dispatchable queues the oldest
+        head wins, so probe work and bucket work interleave FIFO-fair.
+        Returns (completed requests, measured busy seconds); completions
+        are stamped at now + busy. (([], 0.0) means every queued batch is
+        still gated — advance the clock to `next_deadline()`.)"""
+        self.metrics.observe_depth(now, self.depth())
+        ready, _ = self._dispatchable(now)
+        if not ready:
+            return [], 0.0
+        # oldest head wins; on arrival ties probe work goes first (it feeds
+        # the bucket queues, improving downstream batch fill)
+        target = min(ready, key=lambda x: (x[0], x[1] != "probe"))[1]
+        if target == "probe":
+            return self._pump_probe(now)
+        return self._pump_bucket(now, target)
+
+    def run_until_idle(self, now: float) -> float:
+        """Drain all queued work; returns the advanced clock."""
+        while self.has_work():
+            _, busy = self.pump(now)
+            if busy > 0:
+                now += busy
+            else:
+                # everything gated on batch_wait — jump to the deadline
+                now = max(now, self.next_deadline())
+        return now
+
+    # ---------------------------------------------------------- internals ----
+    def _cfg_for(self, kind: int) -> SearchConfig:
+        if self.cfg.pred_kind == kind:
+            return self.cfg
+        return dataclasses.replace(self.cfg, pred_kind=kind)
+
+    def _pump_probe(self, now: float) -> tuple[list[Request], float]:
+        scfg = self.scfg
+        reqs = self.ingress.take_kind_group(self.batcher.lane_width)
+        cfg = self._cfg_for(reqs[0].kind)
+        t0 = self.timer()
+        width = self.batcher.width_for(len(reqs))
+        queries = self.batcher.pad_queries(reqs, width)
+        spec = self.batcher.pad_spec(reqs, width)
+        lane_on = np.zeros(width, np.int32)
+        lane_on[: len(reqs)] = 1
+
+        # Stage 1 — the shared early probe, via the same probe_and_features
+        # as the one-shot pipeline (per-lane budget array: pad lanes get 0).
+        # Sharing the code, not just the schedule, is what keeps the
+        # scheduled == one-shot bit-identity from desynchronizing.
+        st, feats = probe_and_features(
+            self.engine, cfg, queries, spec,
+            jnp.asarray(lane_on * scfg.probe_budget), n_probes=scfg.n_probes)
+
+        # Stage 2 — cost estimate (same path as one-shot e2e_search).
+        budgets, _ = predict_budgets(self.estimator, feats, scfg.alpha,
+                                     scfg.min_budget, scfg.max_budget,
+                                     scfg.ablate_filter, packed=self._packed)
+        budgets = np.asarray(jax.block_until_ready(budgets))
+        cnt = np.asarray(st.cnt)
+        res_idx = np.asarray(st.res_idx)
+        res_dist = np.asarray(st.res_dist)
+        steps = int(np.asarray(st.hops).max())  # lockstep trip count
+        busy = (self.timer() - t0 if self.service_model is None
+                else self.service_model(steps, width))
+        self.metrics.observe_batch("probe", len(reqs), width, busy, steps)
+
+        done = []
+        for i, r in enumerate(reqs):
+            r.budget = int(budgets[i])
+            r.probe_done = now + busy
+            r.executed = int(cnt[i])
+            if r.budget <= r.executed:
+                # the estimator says the probe already saw enough — the
+                # one-shot pipeline's resume would be a no-op for this lane
+                self._finish(r, res_idx[i], res_dist[i], cnt[i], now + busy)
+                done.append(r)
+            else:
+                r.state = (st, i)   # lane reference into the probe batch
+                bucket = (0 if self.scfg.policy == "escalate" else None)
+                self.batcher.enqueue(r, bucket)
+        return done, busy
+
+    def _pump_bucket(self, now: float, bucket: int | None = None,
+                     ) -> tuple[list[Request], float]:
+        idx, reqs, cap = self.batcher.form_batch(bucket)
+        if not reqs:
+            return [], 0.0
+        cfg = self._cfg_for(reqs[0].kind)
+        t0 = self.timer()
+        width = self.batcher.width_for(len(reqs))
+        queries = self.batcher.pad_queries(reqs, width)
+        spec = self.batcher.pad_spec(reqs, width)
+        budgets = self.batcher.pad_budgets(reqs, cap, width)
+        state = self.batcher.pad_states(reqs, width)
+
+        # Stage 3 — adaptive termination, bounded by the bucket cap.
+        entry_hops = np.asarray(state.hops)
+        out = self.engine.search(cfg, queries, spec, budgets, state=state)
+        jax.block_until_ready(out)
+        res_idx = np.asarray(out.res_idx)
+        res_dist = np.asarray(out.res_dist)
+        cnt = np.asarray(out.cnt)
+        targets = np.asarray(budgets)
+        steps = int((np.asarray(out.hops) - entry_hops).max())
+        busy = (self.timer() - t0 if self.service_model is None
+                else self.service_model(steps, width))
+        self.metrics.observe_batch(f"bucket{idx}", len(reqs), width, busy,
+                                   steps)
+
+        done = []
+        for i, r in enumerate(reqs):
+            r.n_slices += 1
+            r.executed = int(targets[i])
+            if cap is None or r.budget <= cap:
+                r.state = None
+                self._finish(r, res_idx[i], res_dist[i], cnt[i], now + busy)
+                done.append(r)
+            else:
+                # preemption: bounded slice done, requeue the carried state
+                r.state = (out, i)
+                nxt = (idx + 1 if self.scfg.policy == "escalate" else None)
+                self.batcher.enqueue(r, nxt)
+        return done, busy
+
+    def _finish(self, req: Request, res_idx, res_dist, ndc, at: float):
+        req.res_idx = np.asarray(res_idx)
+        req.res_dist = np.asarray(res_dist)
+        req.ndc = int(ndc)
+        req.completed = at
+        if self.cache is not None:
+            self.cache.put(self._key(req), req.res_idx, req.res_dist, req.ndc)
+        self.metrics.complete(req)
+
+    def summary(self) -> dict:
+        return self.metrics.summary(self.ingress.n_shed,
+                                    self.ingress.n_expired, self.cache)

@@ -1,0 +1,278 @@
+"""Cost-aware serving subsystem: batcher invariants, bucket routing,
+scheduled-vs-oneshot bit-identity, cache correctness, admission control."""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import (CostEstimator, SearchConfig, SearchEngine, e2e_search,
+                        generate_training_data)
+from repro.data import make_dataset, make_label_workload, make_range_workload
+from repro.filters.predicates import PRED_CONTAIN, PRED_EQUAL, PRED_RANGE
+from repro.index import build_graph_index
+from repro.serve import (AdmissionQueue, CostAwareScheduler, MicroBatcher,
+                         Request, ServeConfig, requests_from_workload)
+from repro.serve.cache import request_key
+
+
+@pytest.fixture(scope="module")
+def world():
+    ds = make_dataset(n=2500, dim=24, n_clusters=6, alphabet_size=32, seed=0)
+    graph = build_graph_index(ds.vectors, degree=16, seed=0)
+    engine = SearchEngine.build(ds, graph)
+    cfg = SearchConfig(k=5, queue_size=64, pred_kind=PRED_CONTAIN)
+    wl_tr = make_label_workload(ds, batch=192, kind="contain", seed=7)
+    td = generate_training_data(engine, ds, wl_tr, cfg, probe_budget=48,
+                                chunk=96)
+    est = CostEstimator.fit(td.features, td.w_q, n_trees=60, depth=4)
+    return ds, engine, cfg, est
+
+
+def _req(rid, kind=PRED_CONTAIN, budget=None, arrival=0.0, dim=4, words=1):
+    r = Request(rid=rid, query=np.full(dim, rid, np.float32), kind=kind,
+                arrival=arrival)
+    if kind == PRED_RANGE:
+        r.range_lo, r.range_hi = 0.0, 1.0
+    else:
+        r.label_mask = np.asarray([rid + 1] * words, np.uint32)
+    r.budget = budget
+    return r
+
+
+# -------------------------------------------------------------- batcher ----
+def test_batcher_padding_invariants():
+    b = MicroBatcher(lane_width=8, buckets=(100, None))
+    reqs = [_req(i, budget=50, arrival=i) for i in range(3)]
+    q = np.asarray(b.pad_queries(reqs))
+    assert q.shape == (8, 4)
+    assert (q[3:] == 0).all()                       # pad lanes zeroed
+    spec = b.pad_spec(reqs)
+    assert spec.label_masks.shape == (8, 1)
+    assert (spec.label_masks[3:] == 0).all()
+    budgets = np.asarray(b.pad_budgets(reqs, cap=None))
+    assert budgets.shape == (8,)
+    assert (budgets[:3] == 50).all() and (budgets[3:] == 0).all()
+
+
+def test_batcher_no_mixed_kind_batches():
+    b = MicroBatcher(lane_width=4, buckets=(100, None), fill=True)
+    for i, kind in enumerate([PRED_CONTAIN, PRED_RANGE, PRED_CONTAIN]):
+        b.enqueue(_req(i, kind=kind, budget=50, arrival=i))
+    _, reqs, _ = b.form_batch()
+    assert [r.rid for r in reqs] == [0, 2]           # FIFO within kind
+    _, reqs, _ = b.form_batch()
+    assert [r.rid for r in reqs] == [1]
+
+
+def test_bucket_routing_deterministic():
+    b = MicroBatcher(lane_width=4, buckets=(100, 400, None))
+    assert b.bucket_of(1) == 0
+    assert b.bucket_of(100) == 0                     # cap is inclusive
+    assert b.bucket_of(101) == 1
+    assert b.bucket_of(400) == 1
+    assert b.bucket_of(401) == 2
+    assert b.bucket_of(10**9) == 2
+    # same inputs → same batches, twice
+    def fill(bb):
+        for i, w in enumerate([50, 500, 90, 120, 10**6]):
+            bb.enqueue(_req(i, budget=w, arrival=i))
+        out = []
+        while bb.depth():
+            idx, reqs, cap = bb.form_batch()
+            out.append((idx, [r.rid for r in reqs], cap))
+        return out
+    b2 = MicroBatcher(lane_width=4, buckets=(100, 400, None))
+    assert fill(b) == fill(b2)
+
+
+def test_opportunistic_fill_rides_spare_lanes():
+    b = MicroBatcher(lane_width=4, buckets=(100, None), fill=True)
+    for i in range(3):
+        b.enqueue(_req(i, budget=50 + i, arrival=float(i)))
+    for i in (3, 4):
+        b.enqueue(_req(i, budget=5000, arrival=3.0 + i))
+    idx, reqs, cap = b.form_batch()
+    assert idx == 0 and cap == 100
+    # 3 residents → natural width 4 → exactly one free pad lane for a rider
+    assert [r.rid for r in reqs] == [0, 1, 2, 3]
+    # the rider runs a bounded slice: its lane budget is clamped to the cap
+    budgets = np.asarray(b.pad_budgets(reqs, cap, width=4))
+    assert budgets.tolist() == [50, 51, 52, 100]
+
+
+def test_fill_never_widens_past_natural_width():
+    """Riders must not push a batch to a wider (costlier) lane shape."""
+    b = MicroBatcher(lane_width=16, buckets=(100, None), fill=True)
+    for i in range(3):                              # natural width 4
+        b.enqueue(_req(i, budget=50, arrival=float(i)))
+    for i in range(10, 22):                         # plenty of riders
+        b.enqueue(_req(i, budget=5000, arrival=float(i)))
+    _, reqs, _ = b.form_batch()
+    assert len(reqs) == 4 == b.width_for(3)         # 1 rider, not 13
+
+
+def test_batcher_rejects_unordered_buckets():
+    with pytest.raises(ValueError, match="ascending"):
+        MicroBatcher(buckets=(400, 100, None))
+
+
+def test_form_batch_on_empty_named_bucket():
+    b = MicroBatcher(lane_width=4, buckets=(100, None), fill=True)
+    b.enqueue(_req(0, budget=5000, arrival=0.0))     # lives in bucket 1
+    idx, reqs, cap = b.form_batch(bucket=0)          # bucket 0 is empty
+    assert (idx, reqs, cap) == (0, [], 100)
+    assert b.depth() == 1                            # nothing was lost
+
+
+# ------------------------------------------------- scheduled == one-shot ----
+@pytest.mark.parametrize("policy", ["direct", "escalate"])
+def test_scheduled_equals_oneshot(world, policy):
+    """The acceptance bar: scheduling (micro-batching, bucket routing,
+    resume-requeue slicing, lane padding) is bit-invisible in the results."""
+    ds, engine, cfg, est = world
+    wl = make_label_workload(ds, batch=24, kind="contain", seed=42)
+    one = e2e_search(engine, est, cfg, wl.queries, wl.spec, probe_budget=48,
+                     alpha=1.5)
+    scfg = ServeConfig(lane_width=8, buckets=(128, 512, None), policy=policy,
+                       probe_budget=48, alpha=1.5, cache_capacity=0)
+    sched = CostAwareScheduler(engine, est, cfg, scfg)
+    reqs = requests_from_workload(wl)
+    for r in reqs:
+        assert sched.submit(r, 0.0) == "queued"
+    sched.run_until_idle(0.0)
+    reqs.sort(key=lambda r: r.rid)
+    np.testing.assert_array_equal(
+        np.stack([r.res_idx for r in reqs]), np.asarray(one.state.res_idx))
+    np.testing.assert_array_equal(
+        np.stack([r.res_dist for r in reqs]), np.asarray(one.state.res_dist))
+    np.testing.assert_array_equal(
+        np.asarray([r.ndc for r in reqs]), np.asarray(one.state.cnt))
+    np.testing.assert_array_equal(
+        np.asarray([r.budget for r in reqs]), one.predicted_budget)
+    if policy == "escalate":
+        # the preemption path must actually have been exercised
+        assert any(r.n_slices >= 2 for r in reqs)
+
+
+def test_scheduled_equals_oneshot_with_padding(world):
+    """5 requests through 8-wide lanes: pad lanes must be inert."""
+    ds, engine, cfg, est = world
+    wl = make_label_workload(ds, batch=5, kind="contain", seed=13)
+    one = e2e_search(engine, est, cfg, wl.queries, wl.spec, probe_budget=48,
+                     alpha=1.5)
+    sched = CostAwareScheduler(engine, est, cfg, ServeConfig(
+        lane_width=8, buckets=(128, 512, None), probe_budget=48, alpha=1.5,
+        cache_capacity=0))
+    reqs = requests_from_workload(wl)
+    for r in reqs:
+        sched.submit(r, 0.0)
+    sched.run_until_idle(0.0)
+    reqs.sort(key=lambda r: r.rid)
+    np.testing.assert_array_equal(
+        np.stack([r.res_idx for r in reqs]), np.asarray(one.state.res_idx))
+
+
+def test_scheduled_mixed_kinds_equal_per_kind_oneshot(world):
+    """Interleaved contain/range requests: each kind matches its one-shot."""
+    ds, engine, cfg, est = world
+    wl_c = make_label_workload(ds, batch=8, kind="contain", seed=5)
+    wl_r = make_range_workload(ds, batch=8, seed=6)
+    cfg_r = dataclasses.replace(cfg, pred_kind=PRED_RANGE)
+    one_c = e2e_search(engine, est, cfg, wl_c.queries, wl_c.spec,
+                       probe_budget=48, alpha=1.5)
+    one_r = e2e_search(engine, est, cfg_r, wl_r.queries, wl_r.spec,
+                       probe_budget=48, alpha=1.5)
+    sched = CostAwareScheduler(engine, est, cfg, ServeConfig(
+        lane_width=8, buckets=(128, 512, None), probe_budget=48, alpha=1.5,
+        cache_capacity=0))
+    rc = requests_from_workload(wl_c, start_rid=0)
+    rr = requests_from_workload(wl_r, start_rid=100)
+    inter = [r for pair in zip(rc, rr) for r in pair]
+    for r in inter:
+        sched.submit(r, 0.0)
+    sched.run_until_idle(0.0)
+    np.testing.assert_array_equal(np.stack([r.res_idx for r in rc]),
+                                  np.asarray(one_c.state.res_idx))
+    np.testing.assert_array_equal(np.stack([r.res_idx for r in rr]),
+                                  np.asarray(one_r.state.res_idx))
+
+
+# ---------------------------------------------------------------- cache ----
+def test_cache_hit_returns_identical_result(world):
+    ds, engine, cfg, est = world
+    wl = make_label_workload(ds, batch=4, kind="contain", seed=3)
+    sched = CostAwareScheduler(engine, est, cfg, ServeConfig(
+        lane_width=4, buckets=(128, None), probe_budget=48, alpha=1.5))
+    reqs = requests_from_workload(wl)
+    for r in reqs:
+        assert sched.submit(r, 0.0) == "queued"
+    sched.run_until_idle(0.0)
+    again = requests_from_workload(wl)
+    for r in again:
+        assert sched.submit(r, 1.0) == "hit"
+    for a, b in zip(reqs, again):
+        assert b.cache_hit and b.completed == 1.0
+        np.testing.assert_array_equal(a.res_idx, b.res_idx)
+        assert a.ndc == b.ndc
+    assert sched.cache.hit_rate == 0.5  # 4 misses then 4 hits
+
+
+def test_cache_keys_distinguish_filter_spec_collisions():
+    q = np.ones(8, np.float32)
+    base = dict(k=5, queue_size=64, alpha=1.5, probe_budget=48)
+    contain = Request(0, q, PRED_CONTAIN, label_mask=np.asarray([7], np.uint32))
+    equal = Request(1, q, PRED_EQUAL, label_mask=np.asarray([7], np.uint32))
+    # same query, same mask *bytes*, different predicate kind
+    assert request_key(contain, **base) != request_key(equal, **base)
+    # same kind, different mask
+    other = Request(2, q, PRED_CONTAIN, label_mask=np.asarray([9], np.uint32))
+    assert request_key(contain, **base) != request_key(other, **base)
+    # a range whose float bytes shadow the mask bytes still differs
+    lo, hi = np.frombuffer(np.asarray([7, 7], np.uint32).tobytes(),
+                           np.float32)[:2]
+    rng_req = Request(3, q, PRED_RANGE, range_lo=float(lo), range_hi=float(hi))
+    assert request_key(contain, **base) != request_key(rng_req, **base)
+    # search parameters are part of the key — every answer-changing one
+    assert (request_key(contain, 5, 64, 1.5, 48)
+            != request_key(contain, 5, 64, 2.0, 48))
+    assert (request_key(contain, **base)
+            != request_key(contain, **base, min_budget=64))
+    assert (request_key(contain, **base)
+            != request_key(contain, **base, n_probes=1))
+    assert (request_key(contain, **base)
+            != request_key(contain, **base, ablate_filter=True))
+    # identical requests collide on purpose
+    twin = Request(4, q.copy(), PRED_CONTAIN,
+                   label_mask=np.asarray([7], np.uint32))
+    assert request_key(contain, **base) == request_key(twin, **base)
+
+
+# ------------------------------------------------------------- admission ----
+def test_admission_backpressure_and_deadlines():
+    q = AdmissionQueue(capacity=2)
+    a, b, c = (_req(i, arrival=float(i)) for i in range(3))
+    assert q.offer(a, 0.0) and q.offer(b, 0.0)
+    assert not q.offer(c, 0.0)                       # full → shed
+    assert q.n_shed == 1
+    d = _req(9, arrival=0.0)
+    d.deadline = 1.0
+    assert not q.offer(d, 2.0)                       # expired on arrival
+    assert q.n_expired == 1
+    assert len(q) == 2
+
+
+def test_scheduler_reports_shed_and_metrics_json(world):
+    ds, engine, cfg, est = world
+    wl = make_label_workload(ds, batch=6, kind="contain", seed=9)
+    sched = CostAwareScheduler(engine, est, cfg, ServeConfig(
+        lane_width=4, buckets=(128, None), probe_budget=48, alpha=1.5,
+        queue_capacity=4, cache_capacity=0))
+    reqs = requests_from_workload(wl)
+    outcomes = [sched.submit(r, 0.0) for r in reqs]
+    assert outcomes.count("queued") == 4 and outcomes.count("shed") == 2
+    sched.run_until_idle(0.0)
+    s = sched.summary()
+    assert s["n_completed"] == 4 and s["n_shed"] == 2
+    assert s["latency"]["p50"] <= s["latency"]["p99"]
+    json.dumps(s)  # BENCH artifact requirement: plain-JSON serializable
