@@ -1,0 +1,160 @@
+"""Filter-algebra benchmark: composite (AND / OR / NOT) filtered-AKNN
+workloads end-to-end through the E2E pipeline.
+
+For each boolean structure the compiled predicate programs unlock
+(conjunction, disjunction, negation, and a heterogeneous mix), this runs
+the full probe → estimate → resume pipeline — one GBDT trained once on a
+mixed-structure workload serves every shape, its per-clause probe
+selectivities (rho_clause_* features) included — and reports:
+
+  recall        vs the exact filtered top-k (brute-force oracle)
+  mean/p95 NDC  adaptive per-query cost actually spent
+  oracle NDC    the brute-force *pre-filter* baseline's cost: scanning the
+                valid set exactly costs one distance per valid item, i.e.
+                σ_global·N NDC per query — the classic pre-filter strategy
+                every filtered-ANNS paper benchmarks against
+  latency       wall µs/query, warmup + best-of-3 (container noisy-timing
+                discipline)
+
+Writes BENCH_filter_algebra.json at the repo root.
+
+Known limits (recorded, not hidden): the pre-filter oracle's cost is
+σ_global·N, so at this container-scaled corpus (N ≈ 10⁴) ultra-selective
+conjunctions (σ ≈ 1%, ≈100 valid items) are genuinely cheaper to brute-force
+— the crossover the filtered-ANNS literature consistently reports. The
+graph path wins where the valid set is large relative to the traversal
+(negation / disjunction / mixed shapes here, and everything at the paper's
+N ≥ 10⁶ scale, where σ·N is 100× larger while NDC grows far slower).
+Conjunctions also show the lowest convergence rate in training (filtered
+sub-graph disconnection, the paper's PreFiltering pathology), which caps
+their recall at matched α.
+
+    PYTHONPATH=src python -m benchmarks.filter_algebra [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+STRUCTURES = ("and", "or", "not", "mixed")
+
+
+def _timed(fn, repeats=3):
+    import jax
+
+    jax.block_until_ready(fn())  # warmup: compile + first run
+    best, out = float("inf"), None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out.state.res_idx)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--corpus", type=int, default=12000)
+    ap.add_argument("--train-queries", type=int, default=384)
+    ap.add_argument("--eval-queries", type=int, default=96)
+    ap.add_argument("--queue-size", type=int, default=512)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--probe", type=int, default=64)
+    ap.add_argument("--alphas", default="1.0,1.5")
+    ap.add_argument("--quick", action="store_true",
+                    help="small world for the ci.sh smoke run")
+    args = ap.parse_args()
+    if args.quick:
+        args.corpus, args.train_queries = 3000, 96
+        args.eval_queries, args.queue_size = 32, 128
+
+    from repro.core import (CostEstimator, SearchConfig, SearchEngine,
+                            e2e_search, generate_training_data)
+    from repro.data import make_composite_workload, make_dataset
+    from repro.index import build_graph_index, filtered_knn_exact
+    from repro.index.bruteforce import recall_at_k
+
+    backend = os.environ.get("REPRO_BACKEND", "dense")
+    print(f"# bring-up: corpus={args.corpus} backend={backend}")
+    ds = make_dataset(n=args.corpus, dim=48, n_clusters=16, alphabet_size=48,
+                      seed=0)
+    graph = build_graph_index(ds.vectors, degree=24, seed=0)
+    engine = SearchEngine.build(ds, graph, backend=backend)
+    cfg = SearchConfig(k=args.k, queue_size=args.queue_size)
+
+    # One estimator for every boolean structure: trained on the mixed
+    # workload so the GBDT sees conjunctions, disjunctions, negations, and
+    # bare leaves — the per-clause rho features carry the structure signal.
+    print("# W_q ground truth + estimator (mixed-structure training set)")
+    t0 = time.time()
+    wl_tr = make_composite_workload(ds, batch=args.train_queries,
+                                    structure="mixed", seed=10)
+    td = generate_training_data(engine, ds, wl_tr, cfg,
+                                probe_budget=args.probe, chunk=96)
+    est = CostEstimator.fit(td.features, td.w_q, n_trees=150, depth=5)
+    print(f"#   {time.time()-t0:.0f}s, converged={td.converged.mean():.2f}")
+
+    alphas = tuple(float(x) for x in args.alphas.split(","))
+    results = {}
+    for structure in STRUCTURES:
+        wl = make_composite_workload(ds, batch=args.eval_queries,
+                                     structure=structure, seed=99)
+        gt_idx, _ = filtered_knn_exact(wl.queries, ds.vectors, wl.exprs,
+                                       ds.labels_packed, ds.value_matrix,
+                                       args.k)
+        oracle_ndc = float(np.mean(wl.sigma_global) * ds.n)
+        rows = []
+        for alpha in alphas:
+            sec, r = _timed(lambda a=alpha: e2e_search(
+                engine, est, cfg, wl.queries, wl.exprs,
+                probe_budget=args.probe, alpha=a))
+            ndc = np.asarray(r.state.cnt)
+            rec = recall_at_k(np.asarray(r.state.res_idx), gt_idx)
+            rows.append(dict(
+                alpha=alpha,
+                recall=float(rec.mean()),
+                mean_ndc=float(ndc.mean()),
+                p95_ndc=float(np.percentile(ndc, 95)),
+                latency_us_per_query=sec / wl.batch * 1e6,
+                ndc_vs_prefilter=float(oracle_ndc / max(ndc.mean(), 1.0)),
+            ))
+            print(f"{structure:6s} α={alpha}: recall={rows[-1]['recall']:.3f} "
+                  f"NDC={rows[-1]['mean_ndc']:.0f} "
+                  f"(pre-filter oracle {oracle_ndc:.0f} → "
+                  f"{rows[-1]['ndc_vs_prefilter']:.1f}× fewer) "
+                  f"{rows[-1]['latency_us_per_query']:.0f} µs/q")
+        results[structure] = dict(
+            sigma_global_mean=float(np.mean(wl.sigma_global)),
+            prefilter_oracle_ndc=oracle_ndc,   # recall 1.0 by construction
+            e2e=rows,
+        )
+
+    out = dict(
+        protocol=dict(corpus=args.corpus, dim=48,
+                      train_queries=args.train_queries,
+                      eval_queries=args.eval_queries,
+                      queue_size=args.queue_size, k=args.k,
+                      probe_budget=args.probe, backend=backend,
+                      alphas=list(alphas), quick=bool(args.quick),
+                      baseline="brute-force pre-filter: exact scan of the "
+                               "valid set, NDC = sigma_global * N, "
+                               "recall = 1.0",
+                      timing="warmup + best-of-3 wall time"),
+        estimator=dict(n_train=int(td.features.shape[0]),
+                       converged=float(td.converged.mean())),
+        results=results,
+    )
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_filter_algebra.json")
+    if not args.quick:  # the smoke run must not clobber the real artifact
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"# wrote {os.path.normpath(path)}")
+
+
+if __name__ == "__main__":
+    main()

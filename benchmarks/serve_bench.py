@@ -53,6 +53,7 @@ def clone_requests(reqs):
     for r in reqs:
         c = copy.copy(r)
         c.state = None
+        c.cache_key = None  # scheduler-parameter-scoped memo
         c.budget = None
         c.executed = 0
         c.n_slices = 0
@@ -310,22 +311,18 @@ def _train_wq(engine, ds, cfg, est, args):
     """Offline W_q samples for bucket fitting — reuse the estimator's own
     training distribution by re-predicting on a held-out mixed workload
     (cheap: probe only, no exhaustion)."""
-    import dataclasses
-
     from repro.core import probe_and_features
     from repro.core.e2e import predict_budgets
     from repro.data import make_label_workload, make_range_workload
-    from repro.filters.predicates import PRED_CONTAIN, PRED_RANGE
 
     out = []
-    for kind, pred in (("contain", PRED_CONTAIN), ("range", PRED_RANGE)):
+    for kind in ("contain", "range"):
         wl = (make_label_workload(ds, batch=96, kind=kind, seed=77,
                                   hard_fraction=args.hard_fraction)
               if kind == "contain" else
               make_range_workload(ds, batch=96, seed=78,
                                   hard_fraction=args.hard_fraction))
-        c = dataclasses.replace(cfg, pred_kind=pred)
-        _, z = probe_and_features(engine, c, wl.queries, wl.spec, args.probe)
+        _, z = probe_and_features(engine, cfg, wl.queries, wl.spec, args.probe)
         budgets, _ = predict_budgets(est, z, 1.0)
         out.append(np.asarray(budgets))
     return out
@@ -333,19 +330,15 @@ def _train_wq(engine, ds, cfg, est, args):
 
 def _ground_truth(ds, reqs, k: int):
     from repro.index import filtered_knn_exact
-    from repro.serve.queue import batch_spec
 
     order = sorted(reqs, key=lambda r: r.rid)
+    exprs = [r.expr for r in order]  # any mix of filter structures
+    q = np.stack([r.query for r in order])
+    idx, _ = filtered_knn_exact(q, ds.vectors, exprs, ds.labels_packed,
+                                ds.value_matrix, k)
     gt = np.zeros((len(order), k), np.int64)
-    # group by kind (batch_spec cannot mix predicate kinds)
-    for kind in {r.kind for r in order}:
-        grp = [r for r in order if r.kind == kind]
-        spec = batch_spec(grp, len(grp))
-        q = np.stack([r.query for r in grp])
-        idx, _ = filtered_knn_exact(q, ds.vectors, spec, ds.labels_packed,
-                                    ds.values, k)
-        for r, row in zip(grp, idx):
-            gt[r.rid] = row
+    for r, row in zip(order, idx):
+        gt[r.rid] = row
     return gt
 
 

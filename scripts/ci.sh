@@ -17,6 +17,7 @@ export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 CHUNKS=(
   "tests/test_kernels.py tests/test_property.py"
+  "tests/test_filters.py"
   "tests/test_backends.py"
   "tests/test_system.py"
   "tests/test_serve.py"
@@ -38,6 +39,12 @@ done
 echo "=== serve smoke ==="
 python -m repro.launch.serve --requests 8 --batch 4 \
   --corpus 2000 --train-queries 64 || fail=1
+
+# Filter-algebra smoke: composite (AND/OR/NOT) workloads end to end through
+# probe → estimate → resume, recall vs the brute-force pre-filter oracle.
+# --quick keeps it small and does not overwrite BENCH_filter_algebra.json.
+echo "=== filter-algebra smoke ==="
+python -m benchmarks.filter_algebra --quick || fail=1
 
 if [ "$fail" -ne 0 ]; then
   echo "CI: FAILURES (see chunks above)"

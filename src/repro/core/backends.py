@@ -24,27 +24,38 @@ from typing import Protocol
 import jax.numpy as jnp
 
 from repro.core.state import INF, SearchConfig
+from repro.filters.compile import clause_counts, eval_program_gathered
 
 
 class TraversalBackend(Protocol):
-    """Per-step hot path: distances + queue/result merges."""
+    """Per-step hot path: filter program + distances + queue/result merges."""
 
     name: str
 
-    def merge_step(self, cfg: SearchConfig, queries, xv, nb, dist_mask, valid,
+    def merge_step(self, cfg: SearchConfig, queries, xv, nb, is_new, prog,
+                   labels_g, values_g,
                    cand_dist, cand_idx, cand_exp, cand_valid, res_dist, res_idx):
-        """Evaluate neighbor distances and merge into the sorted buffers.
+        """Evaluate the predicate program and neighbor distances, then merge
+        into the sorted buffers.
 
-        queries   [B, d]   query vectors
+        queries   [B, d]    query vectors
         xv        [B, R', d] gathered neighbor vectors
-        nb        [B, R']  neighbor ids (-1 padded)
-        dist_mask [B, R']  which neighbors get a distance (NDC accounting)
-        valid     [B, R']  predicate-valid among the new neighbors
-        cand_*    [B, M]   sorted candidate queue buffers
-        res_*     [B, K]   sorted result buffers
+        nb        [B, R']   neighbor ids (-1 padded)
+        is_new    [B, R']   first-visit mask (visited-bitset test upstream)
+        prog      FilterProgram — compiled predicate clauses ([B, S, ...])
+        labels_g  [B, R', W] u32 gathered label masks
+        values_g  [B, R', V] f32 gathered numeric attributes
+        cand_*    [B, M]    sorted candidate queue buffers
+        res_*     [B, K]    sorted result buffers
 
-        Returns (cand_dist, cand_idx, cand_exp, cand_valid, res_dist, res_idx)
-        with the new entries merged in, each buffer sorted ascending.
+        The distance mask follows cfg.mode: "post" scores every new node,
+        "pre" scores only the predicate-valid ones (ACORN accounting).
+
+        Returns (cand_dist, cand_idx, cand_exp, cand_valid, res_dist,
+        res_idx, valid, clause_add): the merged sorted buffers, the
+        per-candidate validity `valid = program(attrs) & is_new` [B, R'],
+        and per-clause hit counters `clause_add` [B, CLAUSE_FEATURE_SLOTS]
+        over the newly inspected candidates.
         """
         ...
 
@@ -116,11 +127,18 @@ def _merge_results(res_dist, res_idx, new_dist, new_idx, k):
 
 @register_backend("dense")
 class DenseBackend:
-    """Pure-jnp reference: einsum distances + stable argsort merges."""
+    """Pure-jnp reference: shared program eval + einsum distances + stable
+    argsort merges."""
 
-    def merge_step(self, cfg, queries, xv, nb, dist_mask, valid,
-                   cand_dist, cand_idx, cand_exp, cand_valid, res_dist, res_idx):
+    def merge_step(self, cfg, queries, xv, nb, is_new, prog, labels_g,
+                   values_g, cand_dist, cand_idx, cand_exp, cand_valid,
+                   res_dist, res_idx):
         m, k = cfg.queue_size, cfg.k
+        pvalid, clause_sat = eval_program_gathered(prog, labels_g, values_g)
+        valid = pvalid & is_new
+        clause_add = clause_counts(clause_sat, is_new)
+        dist_mask = valid if cfg.mode == "pre" else is_new
+
         dd = _sqdist(queries, xv, cfg.use_pallas)
         dd = jnp.where(dist_mask, dd, INF)
 
@@ -134,7 +152,8 @@ class DenseBackend:
             res_dist, res_idx, res_in_d,
             jnp.where(jnp.isfinite(res_in_d), nb, -1), k,
         )
-        return cand_dist, cand_idx, cand_exp, cand_valid, res_dist, res_idx
+        return (cand_dist, cand_idx, cand_exp, cand_valid, res_dist, res_idx,
+                valid, clause_add)
 
 
 # --------------------------------------------------------------------------
@@ -142,21 +161,28 @@ class DenseBackend:
 # --------------------------------------------------------------------------
 @register_backend("pallas")
 class PallasBackend:
-    """Fused kernel: distances + mask + bitonic queue/result merge, one pass.
+    """Fused kernel: predicate program + distances + bitonic merges, one pass.
 
-    The candidate queue rides through the kernel as (dist, packed payload):
-    node id + expanded/valid flags packed into one int32 so the bitonic
-    network permutes a single value lane (see kernels.topk.pack_payload).
+    The kernel evaluates the compiled clause program on the gathered
+    attribute words in VMEM (bitwise ops + range compares, kinds selected
+    per slot), computes distances on the MXU, and merges both sorted
+    buffers — the validity mask never round-trips through HBM. The
+    candidate queue rides as (dist, packed payload): node id +
+    expanded/valid flags packed into one int32 so the bitonic network
+    permutes a single value lane (see kernels.topk.pack_payload).
     """
 
-    def merge_step(self, cfg, queries, xv, nb, dist_mask, valid,
-                   cand_dist, cand_idx, cand_exp, cand_valid, res_dist, res_idx):
+    def merge_step(self, cfg, queries, xv, nb, is_new, prog, labels_g,
+                   values_g, cand_dist, cand_idx, cand_exp, cand_valid,
+                   res_dist, res_idx):
         from repro.kernels import ops as kops
 
         cand_pay = kops.pack_payload(cand_idx, cand_exp, cand_valid)
-        cand_dist, cand_pay, res_dist, res_idx = kops.fused_traversal_step(
-            queries, xv, nb, dist_mask, valid,
-            cand_dist, cand_pay, res_dist, res_idx,
+        (cand_dist, cand_pay, res_dist, res_idx, valid,
+         clause_add) = kops.fused_traversal_step(
+            queries, xv, nb, is_new, prog, labels_g, values_g,
+            cand_dist, cand_pay, res_dist, res_idx, pre=cfg.mode == "pre",
         )
         cand_idx, cand_exp, cand_valid = kops.unpack_payload(cand_pay)
-        return cand_dist, cand_idx, cand_exp, cand_valid, res_dist, res_idx
+        return (cand_dist, cand_idx, cand_exp, cand_valid, res_dist, res_idx,
+                valid, clause_add)

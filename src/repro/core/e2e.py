@@ -34,7 +34,7 @@ def probe_and_features(
     engine: SearchEngine,
     cfg: SearchConfig,
     queries: np.ndarray,
-    spec,
+    filt,                          # FilterSpec | Expr(s) | FilterProgram
     probe_budget: int,
     n_probes: int = 2,
     gt_dist: np.ndarray | None = None,
@@ -51,12 +51,16 @@ def probe_and_features(
     """
     import jax.numpy as jnp
 
+    # compile once up front — engine.compile passes a FilterProgram through
+    # untouched, so the per-phase engine.search calls skip the host-side
+    # expression lowering (a Python loop over the batch for exprs)
+    filt = engine.compile(filt)
     if n_probes <= 1:
-        state = engine.search(cfg, queries, spec, probe_budget, gt_dist=gt_dist)
+        state = engine.search(cfg, queries, filt, probe_budget, gt_dist=gt_dist)
         return state, extract_features(state)
-    state = engine.search(cfg, queries, spec, probe_budget // 2, gt_dist=gt_dist)
+    state = engine.search(cfg, queries, filt, probe_budget // 2, gt_dist=gt_dist)
     z1 = extract_features(state)
-    state = engine.search(cfg, queries, spec, probe_budget, state=state,
+    state = engine.search(cfg, queries, filt, probe_budget, state=state,
                           gt_dist=gt_dist)
     z2 = extract_features(state)
     return state, jnp.concatenate([z2, z2 - z1], axis=1)
@@ -91,7 +95,7 @@ def e2e_search(
     estimator: CostEstimator,
     cfg: SearchConfig,
     queries: np.ndarray,
-    spec,
+    filt,                          # FilterSpec | Expr(s) | FilterProgram
     probe_budget: int = 64,
     alpha: float = 1.0,
     min_budget: int = 32,
@@ -102,7 +106,8 @@ def e2e_search(
     n_probes: int = 2,
 ) -> E2EResult:
     # --- stage 1: early probe (zero overhead — same traversal carry) ---
-    state, feats = probe_and_features(engine, cfg, queries, spec, probe_budget,
+    filt = engine.compile(filt)  # once for probe + resume + repredict loops
+    state, feats = probe_and_features(engine, cfg, queries, filt, probe_budget,
                                       n_probes)
 
     # --- stage 2: cost estimation ---
@@ -112,7 +117,7 @@ def e2e_search(
 
     # --- stage 3: adaptive termination (resume with predicted budget) ---
     if repredict_every <= 0:
-        state = engine.search(cfg, queries, spec, budgets, state=state)
+        state = engine.search(cfg, queries, filt, budgets, state=state)
     else:
         # DARTH-style stepwise: advance Δ NDCs, re-predict, stop when the
         # model says the spent budget suffices.
@@ -125,7 +130,7 @@ def e2e_search(
             if np.all(tgt <= cur):
                 break
             step_budget = np.minimum(tgt, cur + repredict_every)
-            state = engine.search(cfg, queries, spec, step_budget, state=state)
+            state = engine.search(cfg, queries, filt, step_budget, state=state)
             znow = extract_features(state)
             f2 = jnp.concatenate([znow, znow - prev], axis=1) if n_probes > 1 else znow
             prev = znow

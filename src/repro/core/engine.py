@@ -5,8 +5,16 @@ entry point), selects a traversal backend by name, and places everything on
 a 1-D device mesh when more than one accelerator is visible:
 
   index data (base_vectors / neighbors / attrs)  replicated over the mesh
-  per-query arrays (queries, filters, budgets,
+  per-query arrays (queries, compiled filter programs, budgets,
                     every SearchState buffer)     sharded over the batch axis
+
+Filters are accepted in any of three forms — a legacy `FilterSpec` batch, a
+sequence of filter-algebra expressions (`repro.filters.expr`), or an
+already-compiled `FilterProgram` — and are lowered here to one compiled
+program per batch, so the traversal layers below never branch on a
+predicate kind. The engine keeps *one* attribute bundle (label words +
+numeric channels) and always passes both: which attributes a clause reads
+is part of the program, not of the engine call.
 
 The lockstep while_loop contains no cross-lane collectives, so `shard_map`
 over the batch axis runs one independent traversal per device — each shard
@@ -31,7 +39,7 @@ from repro.core.search import SearchConfig, SearchState, run_search
 from repro.core.state import init_state, pad_lanes  # noqa: F401  (re-export)
 from repro.data.synthetic import AttributedDataset
 from repro.distributed.sharding import batch_spec
-from repro.filters.predicates import FilterSpec, PRED_RANGE
+from repro.filters.compile import FilterProgram, as_program
 from repro.index.graph import GraphIndex
 
 BIG_BUDGET = 1 << 30
@@ -57,7 +65,8 @@ _pad_batch = pad_lanes
 class SearchEngine:
     base_vectors: jnp.ndarray   # [N, d]
     label_attrs: jnp.ndarray    # [N, W] uint32
-    value_attrs: jnp.ndarray    # [N] f32
+    value_attrs: jnp.ndarray    # [N, V] f32 (a bare [N] is accepted and
+                                # treated as one channel)
     neighbors: jnp.ndarray      # [N, R]
     entry_point: int
     backend: str | None = None  # None → whatever SearchConfig carries
@@ -81,7 +90,7 @@ class SearchEngine:
         eng = cls(
             base_vectors=jnp.asarray(ds.vectors),
             label_attrs=jnp.asarray(ds.labels_packed),
-            value_attrs=jnp.asarray(ds.values),
+            value_attrs=jnp.asarray(ds.value_matrix),
             neighbors=jnp.asarray(graph.neighbors),
             entry_point=graph.entry_point,
             backend=backend,
@@ -95,16 +104,31 @@ class SearchEngine:
             eng.neighbors = jax.device_put(eng.neighbors, rep)
         return eng
 
-    def _attr_args(self, spec: FilterSpec):
-        if spec.kind == PRED_RANGE:
-            return self.value_attrs, (jnp.asarray(spec.range_lo), jnp.asarray(spec.range_hi))
-        return self.label_attrs, jnp.asarray(spec.label_masks)
+    @property
+    def n_words(self) -> int:
+        return int(self.label_attrs.shape[1])
+
+    @property
+    def n_values(self) -> int:
+        return 1 if self.value_attrs.ndim == 1 else int(self.value_attrs.shape[1])
+
+    def _attrs(self):
+        """The uniform (labels, values[N, V]) bundle every search receives."""
+        vals = self.value_attrs
+        if vals.ndim == 1:  # hand-built engines may carry a single channel
+            vals = vals[:, None]
+        return self.label_attrs, vals
+
+    def compile(self, filt) -> FilterProgram:
+        """Lower FilterSpec | Expr | sequence[Expr] to a device program."""
+        prog = as_program(filt, self.n_words, self.n_values)
+        return FilterProgram(*(jnp.asarray(a) for a in prog))
 
     def search(
         self,
         cfg: SearchConfig,
         queries: np.ndarray,
-        spec: FilterSpec,
+        filt,                         # FilterSpec | Expr(s) | FilterProgram
         budgets,                      # scalar or [B]
         state: SearchState | None = None,
         gt_dist: np.ndarray | None = None,
@@ -114,20 +138,21 @@ class SearchEngine:
             # engine default applies only when the call doesn't pick one:
             # an explicit SearchConfig(backend=...) always wins.
             cfg = dataclasses.replace(cfg, backend=self.backend or "dense")
-        attrs, q_attr = self._attr_args(spec)
+        prog = self.compile(filt)
+        attrs = self._attrs()
         q = jnp.asarray(queries, jnp.float32)
         b = q.shape[0]
         budgets = jnp.broadcast_to(jnp.asarray(budgets, jnp.int32), (b,))
         gt = None if gt_dist is None else jnp.asarray(gt_dist, jnp.float32)
         if self.mesh is None:
             return run_search(
-                cfg, q, q_attr, self.base_vectors, attrs, self.neighbors,
+                cfg, q, prog, self.base_vectors, attrs, self.neighbors,
                 budgets, self.entry_point, state=state, gt_dist=gt,
             )
-        return self._search_sharded(cfg, q, q_attr, attrs, budgets, state, gt)
+        return self._search_sharded(cfg, q, prog, attrs, budgets, state, gt)
 
     # ---------------------------------------------------------- sharded ----
-    def _search_sharded(self, cfg, q, q_attr, attrs, budgets, state, gt):
+    def _search_sharded(self, cfg, q, prog, attrs, budgets, state, gt):
         from jax.experimental.shard_map import shard_map
 
         mesh = self.mesh
@@ -144,12 +169,14 @@ class SearchEngine:
         rep = P()
 
         q = _pad_batch(q, pad)
-        q_attr = _pad_batch(q_attr, pad)
+        # program rows pad with all-zero (match-nothing) clauses — inert
+        # under the 0 NDC budget the pad lanes carry
+        prog = _pad_batch(prog, pad)
         budgets = _pad_batch(budgets, pad)  # 0-budget lanes stop immediately
         state = None if state is None else _pad_batch(state, pad)
         gt = None if gt is None else _pad_batch(gt, pad)
 
-        args = [q, q_attr, self.base_vectors, attrs, self.neighbors, budgets]
+        args = [q, prog, self.base_vectors, attrs, self.neighbors, budgets]
         specs = [bspec, bspec, rep, rep, rep, bspec]
         has_state, has_gt = state is not None, gt is not None
         if has_state:

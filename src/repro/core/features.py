@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.state import SearchState
+from repro.filters.compile import CLAUSE_FEATURE_SLOTS
 
 FEATURE_NAMES: tuple[str, ...] = (
     # --- Global (LAET†) ---
@@ -50,15 +51,28 @@ FEATURE_NAMES: tuple[str, ...] = (
     # --- progression (ours*) ---
     "log_res_full_cnt",   # NDC at which the k-th valid appeared (sentinel: 2·cnt)
     "gap_queue_nn",       # (d_queue_tail - d_nn_last)/d_start — frontier vs results
+    # --- per-clause probe selectivities (ours*, filter algebra) ---
+    # rho of each compiled clause slot among inspected nodes: a conjunction
+    # whose clauses have very different local selectivities costs very
+    # differently from one whose clauses agree, which one aggregate rho
+    # cannot express. Slots beyond the program's clause count read 0.
+    "rho_clause_0",
+    "rho_clause_1",
+    "rho_clause_2",
+    "rho_clause_3",
 )
 
 N_FEATURES = len(FEATURE_NAMES)
 
+assert FEATURE_NAMES[-CLAUSE_FEATURE_SLOTS:] == tuple(
+    f"rho_clause_{c}" for c in range(CLAUSE_FEATURE_SLOTS)
+), "rho_clause_* names must track filters.compile.CLAUSE_FEATURE_SLOTS"
+
 # Feature indices that constitute the paper's novel Filter group — the
 # no-filter-features ablation (paper Figs. 5/6 "w/o filter") zeroes these.
 # (includes the progression features, which are also filter-derived: they
-# measure how fast *valid* results accumulate)
-FILTER_FEATURE_IDX = (3, 4, 5, 26, 27)
+# measure how fast *valid* results accumulate, and the per-clause rhos)
+FILTER_FEATURE_IDX = (3, 4, 5, 26, 27, 28, 29, 30, 31)
 
 
 def _stats_sorted(dist: jax.Array, d_start: jax.Array):
@@ -108,6 +122,7 @@ def extract_features(state: SearchState) -> jax.Array:
     rho_queue = (state.cand_valid & in_q).sum(axis=1) / nq
     rho_pilot = state.n_valid_visited / jnp.maximum(state.n_inspected, 1)
     rho_pop = state.n_pop_valid / jnp.maximum(state.hops, 1)
+    rho_clause = state.n_clause_valid / jnp.maximum(state.n_inspected, 1)[:, None]
 
     feats = jnp.stack(
         [
@@ -142,7 +157,9 @@ def extract_features(state: SearchState) -> jax.Array:
                 .astype(jnp.float32)
             ),
             (qt - rt) / ds,
-        ],
+        ]
+        + [rho_clause[:, c].astype(jnp.float32)
+           for c in range(rho_clause.shape[1])],
         axis=1,
     )
     return feats.astype(jnp.float32)

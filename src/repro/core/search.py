@@ -52,9 +52,9 @@ from repro.core.step import make_step
 def run_search(
     cfg: SearchConfig,
     queries: jax.Array,
-    q_attr,
+    prog,                          # FilterProgram (leaves [B, S, ...])
     base_vectors: jax.Array,
-    attrs,
+    attrs,                         # (labels [N, W] u32, values [N, V] f32)
     neighbors: jax.Array,
     budgets: jax.Array,            # [B] i32 NDC budgets (use big value for ∞)
     entry_point: int,
@@ -63,6 +63,9 @@ def run_search(
 ) -> SearchState:
     """Run (or resume) the lockstep search until all lanes terminate.
 
+    Filters arrive pre-compiled: `prog` is a `FilterProgram` whose padded
+    clause slots let a batch of heterogeneous boolean filters evaluate in
+    one traced pass (the engine compiles FilterSpec / expression inputs).
     Termination per lane: queue exhausted, NDC ≥ budget, or (optional)
     greedy result-bound stop. Resuming with a larger budget continues
     exactly where the previous phase stopped — the paper's zero-overhead
@@ -71,12 +74,12 @@ def run_search(
     """
     backend = get_backend(cfg.backend or "dense")
     if state is None:
-        state = init_state(cfg, queries, q_attr, base_vectors, attrs, entry_point,
+        state = init_state(cfg, queries, prog, base_vectors, attrs, entry_point,
                            gt_dist)
     else:
         state = prepare_resume(state)
 
-    step = make_step(cfg, backend, queries, q_attr, base_vectors, attrs,
+    step = make_step(cfg, backend, queries, prog, base_vectors, attrs,
                      neighbors, budgets, gt_dist)
 
     def cond(carry):

@@ -10,7 +10,12 @@ Key structures (all static shapes):
   candidate queue   sorted ascending [B, M]  (dist, idx, expanded, valid)
   result set        sorted ascending [B, K]  (valid nodes only)
   visited set       packed bitset    [B, ceil(N/32)] uint32
-  counters          cnt (NDC), n_inspected, n_valid_visited, n_pop_valid, hops
+  counters          cnt (NDC), n_inspected, n_valid_visited, n_pop_valid,
+                    n_clause_valid (per predicate clause), hops
+
+Filters arrive as a compiled `FilterProgram` (filters/compile.py): a padded
+clause-slot program a whole heterogeneous batch evaluates in one pass, so
+neither the state nor the step ever branches on a predicate kind.
 """
 from __future__ import annotations
 
@@ -22,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.filters.compile import clause_counts, eval_program_gathered
 from repro.filters.predicates import PRED_CONTAIN
 
 INF = jnp.float32(jnp.inf)
@@ -32,7 +38,8 @@ class SearchConfig:
     k: int = 10                # result set size
     queue_size: int = 128      # M — beam width / ef analogue
     degree: int = 32           # graph out-degree R (static)
-    pred_kind: int = PRED_CONTAIN
+    pred_kind: int = PRED_CONTAIN  # legacy tag; traversal is driven entirely
+                               # by the compiled FilterProgram and ignores it
     mode: str = "post"         # "post" | "pre"
     two_hop_stride: int = 8    # pre mode: sample every s-th 2-hop neighbor
     max_steps: int = 100000
@@ -53,6 +60,9 @@ class SearchState(NamedTuple):
     cnt: jax.Array             # [B] i32 — NDC (paper's W_q unit)
     n_inspected: jax.Array     # [B] i32 — predicate evaluations
     n_valid_visited: jax.Array # [B] i32 — valid among inspected
+    n_clause_valid: jax.Array  # [B, C] i32 — per-clause-slot hits among
+                               # inspected (C = CLAUSE_FEATURE_SLOTS, fixed
+                               # regardless of the program's slot count)
     n_pop_valid: jax.Array     # [B] i32 — valid among popped/expanded
     hops: jax.Array            # [B] i32 — expansions (search hops)
     active: jax.Array          # [B] bool
@@ -64,13 +74,12 @@ class SearchState(NamedTuple):
 def init_state(
     cfg: SearchConfig,
     queries: jax.Array,      # [B, d]
-    q_attr,                  # [B, W] masks or (lo[B], hi[B])
+    prog,                    # FilterProgram (leaves [B, S, ...])
     base_vectors: jax.Array, # [N, d]
-    attrs,                   # [N, W] u32 or [N] f32
+    attrs,                   # (labels [N, W] u32, values [N, V] f32)
     entry_point: int,
     gt_dist: jax.Array | None = None,  # [B, K] for convergence tracking
 ) -> SearchState:
-    from repro.core.step import evaluate_gathered_predicate
     from repro.kernels.distance import sqdist_bdrd
 
     del gt_dist  # tracked by the step fn; accepted for signature stability
@@ -78,10 +87,12 @@ def init_state(
     n = base_vectors.shape[0]
     nw = (n + 31) // 32
     m, k = cfg.queue_size, cfg.k
+    labels, values = attrs
 
     ep = jnp.full((b, 1), entry_point, dtype=jnp.int32)
     d0 = sqdist_bdrd(queries, base_vectors[ep])              # [B,1]
-    val0 = evaluate_gathered_predicate(cfg.pred_kind, attrs, q_attr, ep)
+    val0, csat0 = eval_program_gathered(prog, labels[ep], values[ep])
+    cadd0 = clause_counts(csat0, jnp.ones_like(val0))
 
     cand_dist = jnp.full((b, m), INF).at[:, :1].set(d0)
     cand_idx = jnp.full((b, m), -1, dtype=jnp.int32).at[:, :1].set(ep)
@@ -110,6 +121,7 @@ def init_state(
         cnt=ndc0,
         n_inspected=jnp.ones((b,), jnp.int32),
         n_valid_visited=val0[:, 0].astype(jnp.int32),
+        n_clause_valid=cadd0,
         n_pop_valid=jnp.zeros((b,), jnp.int32),
         hops=jnp.zeros((b,), jnp.int32),
         active=jnp.ones((b,), bool),

@@ -1,10 +1,18 @@
 """Traversal-step layer: the backend-agnostic per-step logic.
 
-One lockstep step = pop → gather frontier → visited test → predicate →
-(backend: distances + queue/result merge) → counters. Everything except the
-backend call is pure bookkeeping shared by all traversal backends, so a
-backend only has to implement the arithmetic hot path (distance evaluation
-and the two sorted-buffer merges) — see `repro.core.backends`.
+One lockstep step = pop → gather frontier → visited test → (backend:
+predicate program + distances + queue/result merge) → counters. Everything
+except the backend call is pure bookkeeping shared by all traversal
+backends, so a backend only has to implement the arithmetic hot path — the
+compiled filter-program evaluation, distance evaluation, and the two
+sorted-buffer merges — see `repro.core.backends`.
+
+The filter arrives as a compiled `FilterProgram` (filters/compile.py), so a
+batch whose queries have heterogeneous boolean structure (And/Or/Not
+compositions, different clause counts) runs through one traced step with no
+per-kind Python branching: the step gathers each candidate's label words
+and numeric attribute channels and hands both, with the program, to the
+backend.
 
 Two traversal modes (static):
   post  PostFiltering (paper §2.2): all new nodes get distances (NDC) and
@@ -19,12 +27,6 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.state import INF, SearchConfig, SearchState
-from repro.filters.predicates import evaluate_predicate
-
-
-def evaluate_gathered_predicate(kind: int, attrs, q_attr, nb_safe):
-    """Gather node attributes for nb [B, R'] and evaluate the filter."""
-    return evaluate_predicate(kind, attrs[nb_safe], q_attr)
 
 
 def gather_frontier(cfg: SearchConfig, neighbors, u_safe):
@@ -52,15 +54,18 @@ def gather_frontier(cfg: SearchConfig, neighbors, u_safe):
     return nb
 
 
-def make_step(cfg: SearchConfig, backend, queries, q_attr, base_vectors, attrs,
+def make_step(cfg: SearchConfig, backend, queries, prog, base_vectors, attrs,
               neighbors, budgets, gt_dist):
     """Build the while_loop body closed over static data and per-lane budgets.
 
     `backend` is a `TraversalBackend`: it receives the gathered neighbor
-    vectors plus the current sorted buffers and returns the merged buffers.
+    vectors and attributes plus the compiled filter program and the current
+    sorted buffers, and returns the merged buffers together with the
+    per-candidate validity mask and per-clause hit counters.
     """
     b = queries.shape[0]
     rows = jnp.arange(b, dtype=jnp.int32)[:, None]
+    label_attrs, value_attrs = attrs
 
     def step(state: SearchState) -> SearchState:
         # ---- pop best unexpanded candidate per lane ----
@@ -94,35 +99,32 @@ def make_step(cfg: SearchConfig, backend, queries, q_attr, base_vectors, attrs,
         seen = (words & bit) != 0
         is_new = nb_ok & (~seen)
 
-        # ---- predicate on inspected nodes ----
-        valid = evaluate_gathered_predicate(cfg.pred_kind, attrs, q_attr, nb_safe)
-        valid = valid & is_new
-
-        # ---- distance mask (post: all new get NDC; pre: valid only) ----
-        dist_mask = valid if cfg.mode == "pre" else is_new
-
         # ---- visited bits: set for every inspected-new node ----
         scat_w = jnp.where(is_new, word_idx, -1)              # -1 dropped
         scat_b = jnp.where(is_new, bit, jnp.uint32(0))
         visited = state.visited.at[rows, scat_w].add(scat_b, mode="drop")
 
-        # ---- backend hot path: distances + queue/result merges ----
+        # ---- backend hot path: filter program + distances + merges ----
         xv = base_vectors[nb_safe]                            # [B, R', d]
-        cand_dist, cand_idx, cand_exp2, cand_valid, res_dist, res_idx = (
-            backend.merge_step(
-                cfg, queries, xv, nb, dist_mask, valid,
-                state.cand_dist, state.cand_idx, cand_exp, state.cand_valid,
-                state.res_dist, state.res_idx,
-            )
+        labels_g = label_attrs[nb_safe]                       # [B, R', W]
+        values_g = value_attrs[nb_safe]                       # [B, R', V]
+        (cand_dist, cand_idx, cand_exp2, cand_valid, res_dist, res_idx,
+         valid, clause_add) = backend.merge_step(
+            cfg, queries, xv, nb, is_new, prog, labels_g, values_g,
+            state.cand_dist, state.cand_idx, cand_exp, state.cand_valid,
+            state.res_dist, state.res_idx,
         )
 
-        # ---- counters ----
+        # ---- counters (dist mask: post = all new get NDC; pre = valid) ----
+        dist_mask = valid if cfg.mode == "pre" else is_new
         ndc_add = dist_mask.sum(axis=1).astype(jnp.int32)
         insp_add = is_new.sum(axis=1).astype(jnp.int32)
         valid_add = valid.sum(axis=1).astype(jnp.int32)
         cnt = state.cnt + jnp.where(act, ndc_add, 0)
         n_inspected = state.n_inspected + jnp.where(act, insp_add, 0)
         n_valid_visited = state.n_valid_visited + jnp.where(act, valid_add, 0)
+        n_clause_valid = state.n_clause_valid + jnp.where(
+            act[:, None], clause_add, 0)
         n_pop_valid = state.n_pop_valid + jnp.where(act & u_valid, 1, 0)
         hops = state.hops + jnp.where(act, 1, 0)
 
@@ -152,6 +154,7 @@ def make_step(cfg: SearchConfig, backend, queries, q_attr, base_vectors, attrs,
             cnt=cnt,
             n_inspected=n_inspected,
             n_valid_visited=n_valid_visited,
+            n_clause_valid=n_clause_valid,
             n_pop_valid=n_pop_valid,
             hops=hops,
             active=act,

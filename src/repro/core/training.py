@@ -50,17 +50,18 @@ def generate_training_data(
     for s in range(0, n, chunk):
         e = min(s + chunk, n)
         q = workload.queries[s:e]
-        spec = workload.spec.slice(slice(s, e))
+        filt = workload.filter_slice(s, e)
         gt_idx, gt_dist = filtered_knn_exact(
-            q, np.asarray(engine.base_vectors), spec,
+            q, np.asarray(engine.base_vectors), filt,
             np.asarray(engine.label_attrs), np.asarray(engine.value_attrs), cfg.k,
         )
+        prog = engine.compile(filt)  # once for the probe + exhaustion resume
         # probe phase (budget = f) -> trajectory features
-        st, z = probe_and_features(engine, cfg, q, spec, probe_budget,
+        st, z = probe_and_features(engine, cfg, q, prog, probe_budget,
                                    n_probes, gt_dist=gt_dist)
         z = np.asarray(z)
         # resume to exhaustion, tracking convergence NDC
-        st = engine.search(cfg, q, spec, BIG_BUDGET, state=st, gt_dist=gt_dist)
+        st = engine.search(cfg, q, prog, BIG_BUDGET, state=st, gt_dist=gt_dist)
         cc = np.asarray(st.conv_cnt)
         cnt = np.asarray(st.cnt)
         converged = cc > 0

@@ -4,6 +4,7 @@ from repro.data.synthetic import (
     make_dataset,
     make_label_workload,
     make_range_workload,
+    make_composite_workload,
     DATASET_PRESETS,
     make_preset,
 )
@@ -14,6 +15,7 @@ __all__ = [
     "make_dataset",
     "make_label_workload",
     "make_range_workload",
+    "make_composite_workload",
     "DATASET_PRESETS",
     "make_preset",
 ]

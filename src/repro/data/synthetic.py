@@ -38,15 +38,22 @@ from repro.filters.predicates import (
 
 @dataclasses.dataclass
 class AttributedDataset:
-    """Host-side attributed vector dataset (paper Def. 2.1)."""
+    """Host-side attributed vector dataset (paper Def. 2.1).
+
+    Items carry one label-set attribute (packed multi-hot) plus one or more
+    numeric attribute channels: `values` is the primary channel (kept 1-D
+    for the legacy FilterSpec range path) and `values_aux` holds any extra
+    channels the filter algebra's `Range(..., attr=c)` can address.
+    """
 
     name: str
     vectors: np.ndarray          # [N, d] float32, unit norm
     labels_packed: np.ndarray    # [N, W] uint32 multi-hot
     label_sets: list             # python list of per-item label tuples
-    values: np.ndarray           # [N] float32 numeric attribute
+    values: np.ndarray           # [N] float32 numeric attribute (channel 0)
     alphabet_size: int
     cluster_ids: np.ndarray      # [N] int32 (generation metadata)
+    values_aux: np.ndarray | None = None  # [N, V-1] float32 extra channels
 
     @property
     def n(self) -> int:
@@ -60,19 +67,47 @@ class AttributedDataset:
     def n_words(self) -> int:
         return self.labels_packed.shape[1]
 
+    @property
+    def n_value_attrs(self) -> int:
+        return 1 + (0 if self.values_aux is None else self.values_aux.shape[1])
+
+    @property
+    def value_matrix(self) -> np.ndarray:
+        """[N, V] float32 — every numeric channel, channel 0 = `values`."""
+        if self.values_aux is None:
+            return self.values[:, None]
+        return np.concatenate([self.values[:, None], self.values_aux], axis=1)
+
 
 @dataclasses.dataclass
 class QueryWorkload:
-    """A batch of filtered queries q = (x_q, f_q) plus generation metadata."""
+    """A batch of filtered queries q = (x_q, f_q) plus generation metadata.
+
+    Filters are carried either as a legacy single-kind `FilterSpec` batch
+    (`spec`) or as per-query filter-algebra expressions (`exprs`) — the
+    composite-filter generators below emit the latter. `filters` is the
+    form to hand to `engine.search` / the brute-force oracle.
+    """
 
     queries: np.ndarray       # [B, d] float32
-    spec: FilterSpec          # batched filters
+    spec: FilterSpec | None   # batched single-kind filters (legacy form)
     sigma_global: np.ndarray  # [B] measured global selectivity
     hardness: np.ndarray      # [B] 0 = aligned/easy, 1 = anti-correlated/hard
+    exprs: list | None = None  # [B] filter-algebra expressions
 
     @property
     def batch(self) -> int:
         return self.queries.shape[0]
+
+    @property
+    def filters(self):
+        return self.exprs if self.exprs is not None else self.spec
+
+    def filter_slice(self, s: int, e: int):
+        """Filters of queries [s:e), in whichever form the workload holds."""
+        if self.exprs is not None:
+            return self.exprs[s:e]
+        return self.spec.slice(slice(s, e))
 
 
 def _unit(x: np.ndarray) -> np.ndarray:
@@ -89,6 +124,7 @@ def make_dataset(
     value_noise: float = 0.1,
     seed: int = 0,
     name: str = "synthetic",
+    n_value_attrs: int = 2,
 ) -> AttributedDataset:
     rng = np.random.default_rng(seed)
     centers = _unit(rng.normal(size=(n_clusters, dim)).astype(np.float32))
@@ -120,6 +156,18 @@ def make_dataset(
     values = (raw - raw.min()) / max(raw.max() - raw.min(), 1e-9)
     values = values.astype(np.float32)
 
+    # Extra numeric channels (for the filter algebra's Range(..., attr=c)):
+    # independent noisy probes, drawn *after* every legacy stream draw so
+    # channel 0 / labels / vectors are bit-identical to n_value_attrs=1.
+    values_aux = None
+    if n_value_attrs > 1:
+        cols = []
+        for _ in range(n_value_attrs - 1):
+            wa = rng.normal(size=dim).astype(np.float32)
+            ra = vecs @ wa + value_noise * rng.normal(size=n).astype(np.float32)
+            cols.append((ra - ra.min()) / max(ra.max() - ra.min(), 1e-9))
+        values_aux = np.stack(cols, axis=1).astype(np.float32)
+
     return AttributedDataset(
         name=name,
         vectors=vecs,
@@ -128,6 +176,7 @@ def make_dataset(
         values=values,
         alphabet_size=alphabet_size,
         cluster_ids=cluster_ids,
+        values_aux=values_aux,
     )
 
 
@@ -220,6 +269,109 @@ def make_range_workload(
 
     sig = selectivity(spec, ds.labels_packed, ds.values)
     return QueryWorkload(queries=q, spec=spec, sigma_global=sig, hardness=hard.astype(np.float32))
+
+
+def _window_on_cdf(sorted_vals: np.ndarray, center_rank: int, sel: float,
+                   ) -> tuple[float, float]:
+    """[lo, hi] covering `sel` of the empirical CDF around a rank."""
+    n = sorted_vals.shape[0]
+    width = max(2, int(round(sel * n)))
+    start = int(np.clip(center_rank - width // 2, 0, n - width))
+    return float(sorted_vals[start]), float(sorted_vals[start + width - 1])
+
+
+def make_composite_workload(
+    ds: AttributedDataset,
+    batch: int = 64,
+    structure: Literal["and", "or", "not", "mixed"] = "and",
+    hard_fraction: float = 0.5,
+    selectivities: tuple = (0.05, 0.10, 0.20),
+    seed: int = 3,
+) -> QueryWorkload:
+    """Composite-filter workloads over the filter algebra (PathFinder-style).
+
+    Per-leaf selectivity is controlled the same way as the single-kind
+    generators (label leaves borrow real item label sets; range leaves take
+    windows on the empirical value CDF), and the easy/hard axis is the
+    paper's correlation knob: easy leaves describe the query's own
+    neighborhood, hard leaves an anti-correlated one.
+
+      and    Contain(labels near query) ∧ Range(value window)   — the
+             canonical "tag AND price band" conjunction; σ_global is the
+             product-ish of the leaf selectivities, ρ_local diverges per
+             leaf (exactly what the per-clause rho features observe).
+      or     Contain(tags A) ∨ Contain(tags B from another cluster) — the
+             multi-tag disjunction; hard queries draw *both* tag sets from
+             foreign clusters.
+      not    Range(wide window) ∧ ¬In(blacklisted labels) — exclusion
+             filtering (negated any-of).
+      mixed  uniform mix of the above plus bare single-leaf filters —
+             the serving-layer stress shape (heterogeneous structure in
+             one batch).
+    """
+    from repro.filters.expr import And, Contain, In, Not, Or, Range
+
+    rng = np.random.default_rng(seed)
+    q, src_idx = _sample_query_vectors(ds, batch, rng)
+    hard = (rng.random(batch) < hard_fraction).astype(np.int32)
+    n_chan = ds.n_value_attrs
+    vm = ds.value_matrix
+    sorted_by_chan = [np.sort(vm[:, c]) for c in range(n_chan)]
+    rank_by_chan = [np.searchsorted(sorted_by_chan[c], vm[:, c])
+                    for c in range(n_chan)]
+
+    def other_cluster_item(i):
+        while True:
+            j = int(rng.integers(0, ds.n))
+            if ds.cluster_ids[j] != ds.cluster_ids[src_idx[i]]:
+                return j
+
+    def label_subset(j):
+        labs = ds.label_sets[j]
+        ksub = int(rng.integers(1, len(labs) + 1))
+        return tuple(int(x) for x in rng.choice(labs, size=ksub, replace=False))
+
+    def contain_leaf(i):
+        j = other_cluster_item(i) if hard[i] else int(src_idx[i])
+        return Contain(label_subset(j))
+
+    def range_leaf(i, sel=None, chan=None):
+        c = int(rng.integers(0, n_chan)) if chan is None else chan
+        sel = float(rng.choice(selectivities)) if sel is None else sel
+        own_rank = int(rank_by_chan[c][src_idx[i]])
+        center = (ds.n - 1 - own_rank) if hard[i] else own_rank
+        lo, hi = _window_on_cdf(sorted_by_chan[c], center, sel)
+        return Range(lo, hi, attr=c)
+
+    def build(i, shape):
+        if shape == "and":
+            return And(contain_leaf(i), range_leaf(i))
+        if shape == "or":
+            a = Contain(label_subset(other_cluster_item(i) if hard[i]
+                                     else int(src_idx[i])))
+            b = Contain(label_subset(other_cluster_item(i)))
+            return Or(a, b)
+        if shape == "not":
+            # generous range minus a foreign cluster's tag blacklist
+            wide = range_leaf(i, sel=0.5)
+            block = In(label_subset(other_cluster_item(i)))
+            return And(wide, Not(block))
+        if shape == "contain":
+            return contain_leaf(i)
+        if shape == "range":
+            return range_leaf(i)
+        raise ValueError(shape)
+
+    shapes = (["and", "or", "not", "contain", "range"] if structure == "mixed"
+              else [structure])
+    exprs = [build(i, shapes[int(rng.integers(0, len(shapes)))])
+             for i in range(batch)]
+
+    from repro.filters.predicates import selectivity
+
+    sig = selectivity(exprs, ds.labels_packed, vm)
+    return QueryWorkload(queries=q, spec=None, sigma_global=sig,
+                         hardness=hard.astype(np.float32), exprs=exprs)
 
 
 # Named presets standing in for the paper's four datasets, scaled to the

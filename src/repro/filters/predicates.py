@@ -91,6 +91,23 @@ class FilterSpec:
             return FilterSpec(self.kind, None, self.range_lo[sl], self.range_hi[sl])
         return FilterSpec(self.kind, self.label_masks[sl], None, None)
 
+    def to_expr(self) -> list:
+        """Lower the batch into per-query filter-algebra expressions.
+
+        The constructor shim that lets every pre-algebra call site migrate
+        mechanically: a FilterSpec is exactly a batch of single-leaf
+        expressions, so `engine.search(cfg, q, spec, ...)` and
+        `engine.search(cfg, q, spec.to_expr(), ...)` compile to the same
+        single-clause predicate program.
+        """
+        from repro.filters.expr import Contain, Equal, Range, labels_from_mask
+
+        if self.kind == PRED_RANGE:
+            return [Range(float(lo), float(hi))
+                    for lo, hi in zip(self.range_lo, self.range_hi)]
+        leaf = Contain if self.kind == PRED_CONTAIN else Equal
+        return [leaf(labels_from_mask(m)) for m in self.label_masks]
+
 
 def evaluate_predicate(kind: int, node_attr, query_attr, node_ids=None):
     """Evaluate predicate for a batch of queries against gathered node attrs.
@@ -111,17 +128,48 @@ def evaluate_predicate(kind: int, node_attr, query_attr, node_ids=None):
     raise ValueError(f"unknown predicate kind {kind}")
 
 
-def selectivity(spec: FilterSpec, labels_packed: np.ndarray | None,
-                values: np.ndarray | None) -> np.ndarray:
-    """Global selectivity σ_global per query (paper Def. 2.6), on host."""
-    if spec.kind == PRED_RANGE:
-        v = values[None, :]  # [1, N]
-        ok = (v >= spec.range_lo[:, None]) & (v <= spec.range_hi[:, None])
-        return ok.mean(axis=1)
-    masks = spec.label_masks[:, None, :]  # [B,1,W]
-    items = labels_packed[None, :, :]     # [1,N,W]
-    if spec.kind == PRED_CONTAIN:
-        ok = ((items & masks) == masks).all(axis=-1)
-    else:
-        ok = (items == masks).all(axis=-1)
-    return ok.mean(axis=1)
+def filter_matrix(filt, labels_packed: np.ndarray | None,
+                  values: np.ndarray | None) -> np.ndarray:
+    """[B, N] bool validity of every item under every query's filter.
+
+    `filt` is a FilterSpec batch or a sequence of filter-algebra
+    expressions. This is the host *oracle* shared by selectivity, the
+    brute-force ground truth, and the compiled-program parity tests —
+    deliberately naive (FilterSpec: broadcast bitwise ops; expressions:
+    recursive `eval_expr` per query), nothing like the compiled path.
+
+    Materializes [B, N(, W)] intermediates — callers with large B chunk
+    over queries (see `selectivity`).
+    """
+    if isinstance(filt, FilterSpec):
+        if filt.kind == PRED_RANGE:
+            v = np.asarray(values)
+            v = (v[:, 0] if v.ndim == 2 else v)[None, :]  # channel 0 [1, N]
+            return (v >= filt.range_lo[:, None]) & (v <= filt.range_hi[:, None])
+        masks = filt.label_masks[:, None, :]  # [B,1,W]
+        items = labels_packed[None, :, :]     # [1,N,W]
+        if filt.kind == PRED_CONTAIN:
+            return ((items & masks) == masks).all(axis=-1)
+        return (items == masks).all(axis=-1)
+    from repro.filters.expr import eval_expr
+
+    return np.stack([eval_expr(e, labels_packed, values) for e in filt])
+
+
+def selectivity(filt, labels_packed: np.ndarray | None,
+                values: np.ndarray | None, chunk: int = 64) -> np.ndarray:
+    """Global selectivity σ_global per query (paper Def. 2.6), on host.
+
+    Chunked over queries: the naive broadcast materializes a [B, N, W]
+    boolean intermediate, which at benchmark scale (B≈1.5k, N≈10⁵) is
+    gigabytes — evaluating `chunk` queries at a time bounds the peak at
+    chunk·N·W while returning the identical result.
+    """
+    filt = list(filt) if not isinstance(filt, FilterSpec) else filt
+    b = filt.batch if isinstance(filt, FilterSpec) else len(filt)
+    out = np.empty(b, np.float64)
+    for s in range(0, b, max(1, chunk)):
+        e = min(s + chunk, b)
+        part = filt.slice(slice(s, e)) if isinstance(filt, FilterSpec) else filt[s:e]
+        out[s:e] = filter_matrix(part, labels_packed, values).mean(axis=1)
+    return out

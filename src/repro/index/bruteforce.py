@@ -1,9 +1,14 @@
-"""Exact (filtered) KNN oracle — ground truth for recall and for W_q labels."""
+"""Exact (filtered) KNN oracle — ground truth for recall and for W_q labels.
+
+Filters are accepted as a legacy `FilterSpec` batch or a sequence of
+filter-algebra expressions; validity is delegated to the shared host
+oracle in `repro.filters.predicates.filter_matrix` (naive, nothing like
+the compiled traversal path)."""
 from __future__ import annotations
 
 import numpy as np
 
-from repro.filters.predicates import FilterSpec, PRED_CONTAIN, PRED_EQUAL, PRED_RANGE
+from repro.filters.predicates import filter_matrix
 
 
 def _pairwise_sqdist(queries: np.ndarray, base: np.ndarray, block: int = 4096) -> np.ndarray:
@@ -20,18 +25,13 @@ def _pairwise_sqdist(queries: np.ndarray, base: np.ndarray, block: int = 4096) -
     return out
 
 
-def valid_mask(spec: FilterSpec, labels_packed: np.ndarray, values: np.ndarray) -> np.ndarray:
-    """[B, N] bool validity of every base item for every query filter."""
-    if spec.kind == PRED_RANGE:
-        v = values[None, :]
-        return (v >= spec.range_lo[:, None]) & (v <= spec.range_hi[:, None])
-    masks = spec.label_masks[:, None, :]
-    items = labels_packed[None, :, :]
-    if spec.kind == PRED_CONTAIN:
-        return ((items & masks) == masks).all(axis=-1)
-    if spec.kind == PRED_EQUAL:
-        return (items == masks).all(axis=-1)
-    raise ValueError(spec.kind)
+def valid_mask(filt, labels_packed: np.ndarray, values: np.ndarray) -> np.ndarray:
+    """[B, N] bool validity of every base item for every query filter.
+
+    `filt`: FilterSpec batch or sequence of filter-algebra expressions;
+    `values`: [N] (single channel) or [N, V] numeric attributes.
+    """
+    return filter_matrix(filt, labels_packed, values)
 
 
 def knn_exact(queries: np.ndarray, base: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
@@ -46,7 +46,7 @@ def knn_exact(queries: np.ndarray, base: np.ndarray, k: int) -> tuple[np.ndarray
 def filtered_knn_exact(
     queries: np.ndarray,
     base: np.ndarray,
-    spec: FilterSpec,
+    filt,                      # FilterSpec batch | sequence of expressions
     labels_packed: np.ndarray,
     values: np.ndarray,
     k: int,
@@ -57,7 +57,7 @@ def filtered_knn_exact(
     items are padded with idx=-1, dist=+inf.
     """
     d2 = _pairwise_sqdist(queries, base)
-    ok = valid_mask(spec, labels_packed, values)
+    ok = valid_mask(filt, labels_packed, values)
     d2 = np.where(ok, d2, np.inf)
     idx = np.argpartition(d2, kth=min(k, d2.shape[1] - 1), axis=1)[:, :k]
     dd = np.take_along_axis(d2, idx, axis=1)

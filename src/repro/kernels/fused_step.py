@@ -1,24 +1,36 @@
-"""Pallas TPU kernel: fused traversal step (distance + mask + dual merge).
+"""Pallas TPU kernel: fused traversal step (filter program + distance + merge).
 
-One lockstep traversal step turns R gathered neighbor vectors into updated
-candidate-queue and result-set buffers. Executed as separate ops that is:
-a [B,R] distance batch, a [B,M+R] argsort, a [B,K+R] argsort, and six
-take_along_axis gathers — every intermediate bouncing through HBM.
+One lockstep traversal step turns R gathered neighbor vectors *and their
+attribute words* into updated candidate-queue and result-set buffers.
+Executed as separate ops that is: a clause-program evaluation over
+[B,S,R(,W|V)] intermediates, a [B,R] distance batch, a [B,M+R] argsort, a
+[B,K+R] argsort, and six take_along_axis gathers — every intermediate
+bouncing through HBM.
 
 This kernel fuses the whole step for a block of lanes in one VMEM pass:
 
-  1. squared-L2 distances q·x via the MXU (dot_general, f32 accumulate)
-  2. filter/visited mask application (masked entries emit +inf)
-  3. candidate-queue merge: bitonic top-M over width next_pow2(M+R)
-  4. result-set merge: bitonic top-K over width next_pow2(K+R)
+  1. compiled filter program (filters/compile.py): per clause slot all four
+     primitives (contain / equal / range / any-of) over the gathered label
+     words + numeric channels, selected by kind tag, combined through the
+     DNF term table — statically unrolled over the S slots / T terms of the
+     program shape, vectorized over lanes × neighbors
+  2. squared-L2 distances q·x via the MXU (dot_general, f32 accumulate)
+  3. mode-dependent mask (post: every first-visit scores; pre: valid only);
+     masked entries emit +inf
+  4. candidate-queue merge: bitonic top-M over width next_pow2(M+R)
+  5. result-set merge: bitonic top-K over width next_pow2(K+R)
+
+Besides the merged buffers it emits the validity mask and per-clause hit
+counters (for the estimator's clause-wise probe selectivities) — the only
+predicate state that leaves VMEM.
 
 Payloads ride as packed int32 (node id + expanded/valid flags, see
 kernels.topk.pack_payload) so the sorting network permutes one value lane.
-Replaces the per-step argsort pair of the dense reference backend; wired in
-as `SearchConfig(backend="pallas")` via repro.core.backends.
+Wired in as `SearchConfig(backend="pallas")` via repro.core.backends.
 
-VMEM per block ≈ bB·(R·d + 2·next_pow2(M+R) + 2·next_pow2(K+R))·4 B; for
-bB=8, R=64, d=1024, M=512 that's ~2.2 MB — comfortable on a 16 MB core.
+VMEM per block ≈ bB·(R·(d+W+V) + S·W + 2·next_pow2(M+R) + 2·next_pow2(K+R))·4 B;
+for bB=8, R=64, d=1024, M=512, S=8, W=4 that's ~2.3 MB — comfortable on a
+16 MB core.
 """
 from __future__ import annotations
 
@@ -28,23 +40,92 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.filters.compile import (
+    CLAUSE_FEATURE_SLOTS,
+    clause_counts,
+    eval_program_gathered,
+)
 from repro.kernels.distance import sqdist_bdrd
 from repro.kernels.topk import bitonic_merge_sorted, merge_topm, sort_kv_f32
 
 INF = float("inf")
 
 
-def _fused_step_kernel(q_ref, x_ref, nb_ref, dmask_ref, vmask_ref,
+def _program_valid_kernel(kinds, masks, lo, hi, vattr, neg, term, active,
+                          term_active, labels, values):
+    """In-kernel clause-program evaluation, unrolled over static S and T.
+
+    labels [bb, R, W] u32, values [bb, R, V] f32; program leaves [bb, S, ...].
+    Returns (valid [bb, R] bool, sats: S × [bb, R] bool). Same formulas as
+    `filters.compile.eval_program_gathered`, restructured as per-slot loops
+    (static python unrolling) so Mosaic sees only 2-D elementwise work.
+    """
+    s = kinds.shape[1]
+    t = term_active.shape[1]
+    v_chan = values.shape[2]
+    lits, sats = [], []
+    for si in range(s):
+        msk = masks[:, si, :][:, None, :]                     # [bb,1,W]
+        inter = jnp.bitwise_and(labels, msk)
+        c_contain = jnp.all(inter == msk, axis=-1)            # [bb,R]
+        c_equal = jnp.all(labels == msk, axis=-1)
+        c_in = jnp.any(inter != 0, axis=-1)
+        vs = values[:, :, 0]
+        for ch in range(1, v_chan):                           # channel select
+            vs = jnp.where(vattr[:, si][:, None] == ch, values[:, :, ch], vs)
+        c_range = (vs >= lo[:, si][:, None]) & (vs <= hi[:, si][:, None])
+        kk = kinds[:, si][:, None]
+        prim = jnp.where(kk == 0, c_contain,
+                         jnp.where(kk == 1, c_equal,
+                                   jnp.where(kk == 2, c_range, c_in)))
+        lit = jnp.logical_xor(prim, neg[:, si][:, None])
+        act = active[:, si][:, None]
+        sats.append(lit & act)
+        lits.append(lit | ~act)                               # inactive: no veto
+    valid = jnp.zeros(labels.shape[:2], bool)
+    for ti in range(t):
+        ok = term_active[:, ti][:, None]
+        for si in range(s):
+            member = (term[:, si] == ti) & active[:, si]
+            ok = ok & (lits[si] | ~member[:, None])
+        valid = valid | ok
+    return valid, sats
+
+
+def _fused_step_kernel(q_ref, x_ref, nb_ref, new_ref, lab_ref, val_ref,
+                       kinds_ref, masks_ref, lo_ref, hi_ref, vattr_ref,
+                       neg_ref, term_ref, tact_ref,
                        cd_ref, cp_ref, rd_ref, ri_ref,
-                       ocd_ref, ocp_ref, ord_ref, ori_ref,
-                       *, m, k, wq, wr):
+                       ocd_ref, ocp_ref, ord_ref, ori_ref, ov_ref, occ_ref,
+                       *, m, k, wq, wr, pre, n_clause):
     q = q_ref[...].astype(jnp.float32)          # [bB, d]
     x = x_ref[...].astype(jnp.float32)          # [bB, R, d]
-    dmask = dmask_ref[...]                      # [bB, R]
-    valid = vmask_ref[...]                      # [bB, R]
+    is_new = new_ref[...]                       # [bB, R]
     nb = nb_ref[...]                            # [bB, R]
 
-    # ---- 1. distances (per-lane MXU contraction) ----
+    # ---- 1. compiled filter program on the gathered attribute words ----
+    # (kinds == -1 never matches a primitive tag; the active mask rides in
+    # term_ref's sign bit — see fused_step packing below)
+    term_pack = term_ref[...]
+    active = term_pack >= 0
+    term = jnp.maximum(term_pack, 0)
+    pvalid, sats = _program_valid_kernel(
+        kinds_ref[...], masks_ref[...], lo_ref[...], hi_ref[...],
+        vattr_ref[...], neg_ref[...], term, active, tact_ref[...],
+        lab_ref[...], val_ref[...])
+    valid = pvalid & is_new
+    dmask = valid if pre else is_new
+
+    ov_ref[...] = valid.astype(jnp.int32)
+    counts = []
+    for c in range(n_clause):
+        if c < len(sats):
+            counts.append((sats[c] & is_new).sum(axis=1).astype(jnp.int32))
+        else:
+            counts.append(jnp.zeros(q.shape[:1], jnp.int32))
+    occ_ref[...] = jnp.stack(counts, axis=1)
+
+    # ---- 2. distances (per-lane MXU contraction) ----
     qn = jnp.sum(q * q, axis=-1)[:, None]
     xn = jnp.sum(x * x, axis=-1)
     qx = jax.lax.dot_general(
@@ -54,34 +135,41 @@ def _fused_step_kernel(q_ref, x_ref, nb_ref, dmask_ref, vmask_ref,
     )[:, 0, :]
     d = jnp.maximum(qn + xn - 2.0 * qx, 0.0)
 
-    # ---- 2. mask: non-scored neighbors never enter the buffers ----
+    # ---- 3. mask: non-scored neighbors never enter the buffers ----
     dd = jnp.where(dmask, d, INF)
     # pack_payload(nb, expanded=False, valid) inline; dmask ⇒ nb >= 0
     new_pay = jnp.where(dmask, nb | (valid.astype(jnp.int32) << 30), -1)
 
-    # ---- 3. candidate-queue merge (bitonic top-M) ----
+    # ---- 4. candidate-queue merge (bitonic top-M) ----
     ocd_ref[...], ocp_ref[...] = merge_topm(
         cd_ref[...], cp_ref[...], dd, new_pay, m, wq)
 
-    # ---- 4. result-set merge (valid only, bitonic top-K) ----
+    # ---- 5. result-set merge (valid only, bitonic top-K) ----
     res_in = jnp.where(valid & dmask, dd, INF)
     res_pay = jnp.where(valid & dmask, nb, -1)
     ord_ref[...], ori_ref[...] = merge_topm(
         rd_ref[...], ri_ref[...], res_in, res_pay, k, wr)
 
 
-def fused_step_host(q, x, nb, dist_mask, valid, cand_dist, cand_pay,
-                    res_dist, res_idx):
+def fused_step_host(q, x, nb, is_new, prog, labels_g, values_g,
+                    cand_dist, cand_pay, res_dist, res_idx, *, pre: bool):
     """Host-path (non-TPU) equivalent of the fused kernel.
 
-    Same dataflow — distances, mask, queue merge, result merge in one traced
-    region — but the unrolled bitonic networks are replaced by the log-depth
-    sorted-merge of kernels.topk (XLA:CPU compiles the full network
-    pathologically; see the note there). Distance arithmetic matches the
-    dense backend expression exactly, so dense/pallas parity is bitwise on
-    CPU up to distance ties.
+    Same dataflow — program evaluation, distances, mask, queue merge,
+    result merge in one traced region — but the program evaluation is the
+    *shared* `filters.compile.eval_program_gathered` (so dense/pallas
+    parity is exact by construction) and the unrolled bitonic networks are
+    replaced by the log-depth sorted-merge of kernels.topk (XLA:CPU
+    compiles the full network pathologically; see the note there).
+    Distance arithmetic matches the dense backend expression exactly, so
+    dense/pallas parity is bitwise on CPU up to distance ties.
     """
     m, k = cand_dist.shape[1], res_dist.shape[1]
+    pvalid, clause_sat = eval_program_gathered(prog, labels_g, values_g)
+    valid = pvalid & is_new
+    cadd = clause_counts(clause_sat, is_new)
+    dist_mask = valid if pre else is_new
+
     dd = jnp.where(dist_mask, sqdist_bdrd(q, x), INF)
     new_pay = jnp.where(dist_mask, nb | (valid.astype(jnp.int32) << 30), -1)
 
@@ -94,72 +182,101 @@ def fused_step_host(q, x, nb, dist_mask, valid, cand_dist, cand_pay,
     rs_d, rs_p = sort_kv_f32(res_in, res_pay)
     ordd, ori = bitonic_merge_sorted(res_dist.astype(jnp.float32), res_idx,
                                      rs_d, rs_p, k)
-    return ocd, ocp, ordd, ori
+    return ocd, ocp, ordd, ori, valid, cadd
 
 
-@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
-def fused_step(q, x, nb, dist_mask, valid, cand_dist, cand_pay,
-               res_dist, res_idx, *, block_b: int = 8, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("pre", "block_b", "interpret"))
+def fused_step(q, x, nb, is_new, prog, labels_g, values_g, cand_dist,
+               cand_pay, res_dist, res_idx, *, pre: bool = False,
+               block_b: int = 8, interpret: bool = False):
     """One fused traversal step over a batch of lanes.
 
-    q [B,d], x [B,R,d], nb [B,R] i32, dist_mask/valid [B,R] bool,
+    q [B,d], x [B,R,d], nb [B,R] i32, is_new [B,R] bool,
+    prog FilterProgram (leaves [B,S,...]), labels_g [B,R,W] u32,
+    values_g [B,R,V] f32,
     cand_dist [B,M] f32 + cand_pay [B,M] i32 (packed, sorted ascending),
     res_dist [B,K] f32 + res_idx [B,K] i32 (sorted ascending)
-    -> (cand_dist, cand_pay, res_dist, res_idx) merged, sorted, best-M/K.
+    -> (cand_dist, cand_pay, res_dist, res_idx, valid [B,R] bool,
+        clause_add [B,C] i32) merged, sorted, best-M/K.
     """
     b, dm = q.shape
     r = x.shape[1]
     m = cand_dist.shape[1]
     k = res_dist.shape[1]
+    s = prog.kinds.shape[1]
+    t = prog.term_active.shape[1]
+    w = labels_g.shape[2]
+    v = values_g.shape[2]
     wq = 1 << (m + r - 1).bit_length()
     wr = 1 << (k + r - 1).bit_length()
+
+    # slot activity riding in the term id's sign bit keeps the ref count
+    # down (term >= 0 ⇔ active); neg packs as int32 for the same reason
+    term_pack = jnp.where(prog.active, prog.term, -1).astype(jnp.int32)
 
     # Interpret mode simulates grid steps sequentially; a single full-batch
     # block keeps the simulated step vectorized. On TPU the block size is a
     # VMEM knob and stays small.
     bb = min(b, 1024) if interpret else min(block_b, b)
     pad = (-b) % bb
-    if pad:
-        q = jnp.pad(q, ((0, pad), (0, 0)))
-        x = jnp.pad(x, ((0, pad), (0, 0), (0, 0)))
-        nb = jnp.pad(nb, ((0, pad), (0, 0)), constant_values=-1)
-        dist_mask = jnp.pad(dist_mask, ((0, pad), (0, 0)))
-        valid = jnp.pad(valid, ((0, pad), (0, 0)))
-        cand_dist = jnp.pad(cand_dist, ((0, pad), (0, 0)), constant_values=jnp.inf)
-        cand_pay = jnp.pad(cand_pay, ((0, pad), (0, 0)), constant_values=-1)
-        res_dist = jnp.pad(res_dist, ((0, pad), (0, 0)), constant_values=jnp.inf)
-        res_idx = jnp.pad(res_idx, ((0, pad), (0, 0)), constant_values=-1)
+
+    def pad0(a, fill=0):
+        if pad == 0:
+            return a
+        widths = ((0, pad),) + ((0, 0),) * (a.ndim - 1)
+        return jnp.pad(a, widths, constant_values=fill)
+
+    q = pad0(q)
+    x = pad0(x)
+    nb = pad0(nb, -1)
+    is_new = pad0(is_new)
+    labels_g = pad0(labels_g)
+    values_g = pad0(values_g)
+    kinds = pad0(prog.kinds)
+    masks = pad0(prog.masks)
+    lo = pad0(prog.lo)
+    hi = pad0(prog.hi)
+    vattr = pad0(prog.vattr)
+    neg = pad0(prog.neg)
+    term_pack = pad0(term_pack, -1)
+    tact = pad0(prog.term_active)
+    cand_dist = pad0(cand_dist, jnp.inf)
+    cand_pay = pad0(cand_pay, -1)
+    res_dist = pad0(res_dist, jnp.inf)
+    res_idx = pad0(res_idx, -1)
     bp = q.shape[0]
 
-    kern = functools.partial(_fused_step_kernel, m=m, k=k, wq=wq, wr=wr)
-    ocd, ocp, ordd, ori = pl.pallas_call(
+    def row(shape):
+        return pl.BlockSpec(shape, lambda i: (i,) + (0,) * (len(shape) - 1))
+
+    kern = functools.partial(_fused_step_kernel, m=m, k=k, wq=wq, wr=wr,
+                             pre=pre, n_clause=CLAUSE_FEATURE_SLOTS)
+    ocd, ocp, ordd, ori, ov, occ = pl.pallas_call(
         kern,
         grid=(bp // bb,),
         in_specs=[
-            pl.BlockSpec((bb, dm), lambda i: (i, 0)),
-            pl.BlockSpec((bb, r, dm), lambda i: (i, 0, 0)),
-            pl.BlockSpec((bb, r), lambda i: (i, 0)),
-            pl.BlockSpec((bb, r), lambda i: (i, 0)),
-            pl.BlockSpec((bb, r), lambda i: (i, 0)),
-            pl.BlockSpec((bb, m), lambda i: (i, 0)),
-            pl.BlockSpec((bb, m), lambda i: (i, 0)),
-            pl.BlockSpec((bb, k), lambda i: (i, 0)),
-            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+            row((bb, dm)), row((bb, r, dm)), row((bb, r)), row((bb, r)),
+            row((bb, r, w)), row((bb, r, v)),
+            row((bb, s)), row((bb, s, w)), row((bb, s)), row((bb, s)),
+            row((bb, s)), row((bb, s)), row((bb, s)), row((bb, t)),
+            row((bb, m)), row((bb, m)), row((bb, k)), row((bb, k)),
         ],
         out_specs=[
-            pl.BlockSpec((bb, m), lambda i: (i, 0)),
-            pl.BlockSpec((bb, m), lambda i: (i, 0)),
-            pl.BlockSpec((bb, k), lambda i: (i, 0)),
-            pl.BlockSpec((bb, k), lambda i: (i, 0)),
+            row((bb, m)), row((bb, m)), row((bb, k)), row((bb, k)),
+            row((bb, r)), row((bb, CLAUSE_FEATURE_SLOTS)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((bp, m), jnp.float32),
             jax.ShapeDtypeStruct((bp, m), jnp.int32),
             jax.ShapeDtypeStruct((bp, k), jnp.float32),
             jax.ShapeDtypeStruct((bp, k), jnp.int32),
+            jax.ShapeDtypeStruct((bp, r), jnp.int32),
+            jax.ShapeDtypeStruct((bp, CLAUSE_FEATURE_SLOTS), jnp.int32),
         ],
         interpret=interpret,
-    )(q.astype(jnp.float32), x, nb, dist_mask, valid,
+    )(q.astype(jnp.float32), x, nb, is_new, labels_g, values_g,
+      kinds, masks, lo, hi, vattr, neg, term_pack, tact,
       cand_dist.astype(jnp.float32), cand_pay,
       res_dist.astype(jnp.float32), res_idx)
-    return ocd[:b], ocp[:b], ordd[:b], ori[:b]
+    return (ocd[:b], ocp[:b], ordd[:b], ori[:b], ov[:b].astype(bool),
+            occ[:b])

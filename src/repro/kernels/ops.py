@@ -48,14 +48,21 @@ def queue_merge(dist, payload, new_dist, new_payload):
     return _topk.topm_merge(dist, payload, new_dist, new_payload)
 
 
-def fused_traversal_step(q, x, nb, dist_mask, valid, cand_dist, cand_pay,
-                         res_dist, res_idx):
-    """Fused distance + mask + queue/result merge (one traversal step)."""
+def fused_traversal_step(q, x, nb, is_new, prog, labels_g, values_g,
+                         cand_dist, cand_pay, res_dist, res_idx, *,
+                         pre: bool = False):
+    """Fused filter program + distance + queue/result merge (one step).
+
+    Returns (cand_dist, cand_pay, res_dist, res_idx, valid, clause_add) —
+    see kernels.fused_step. `pre` selects the ACORN distance accounting
+    (score predicate-valid first-visits only).
+    """
     if _interpret():
-        return _fused.fused_step_host(q, x, nb, dist_mask, valid, cand_dist,
-                                      cand_pay, res_dist, res_idx)
-    return _fused.fused_step(q, x, nb, dist_mask, valid, cand_dist, cand_pay,
-                             res_dist, res_idx)
+        return _fused.fused_step_host(q, x, nb, is_new, prog, labels_g,
+                                      values_g, cand_dist, cand_pay,
+                                      res_dist, res_idx, pre=pre)
+    return _fused.fused_step(q, x, nb, is_new, prog, labels_g, values_g,
+                             cand_dist, cand_pay, res_dist, res_idx, pre=pre)
 
 
 def estimator_predict(feats, packed_model, depth):

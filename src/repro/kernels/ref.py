@@ -67,16 +67,56 @@ def topm_merge_ref(dist, payload, new_dist, new_payload):
     return keys[:, :m], vals[:, :m]
 
 
-def fused_step_ref(q, x, nb, dist_mask, valid, cand_dist, cand_pay,
-                   res_dist, res_idx):
-    """Oracle for kernels.fused_step: masked distances + dual bitonic merge."""
+def eval_program_ref(prog, labels_g, values_g):
+    """Oracle for the compiled filter-program evaluation.
+
+    Formulated unlike either production path (no einsum combiner, no
+    unrolled slot loop): a full [B, T, S, R] membership broadcast reduced
+    with jnp.all/any. Returns (valid [B,R] bool, clause_sat [B,S,R] bool).
+    """
+    m = prog.masks[:, :, None, :]
+    lg = labels_g[:, None, :, :]
+    c_contain = jnp.all((lg & m) == m, axis=-1)
+    c_equal = jnp.all(lg == m, axis=-1)
+    c_in = jnp.any((lg & m) != 0, axis=-1)
+    vat = jnp.clip(prog.vattr, 0, values_g.shape[-1] - 1)
+    vsel = jnp.take_along_axis(values_g[:, None, :, :],
+                               vat[:, :, None, None], axis=-1)[..., 0]
+    c_range = (vsel >= prog.lo[:, :, None]) & (vsel <= prog.hi[:, :, None])
+    k = prog.kinds[:, :, None]
+    prim = jnp.where(k == 0, c_contain,
+                     jnp.where(k == 1, c_equal,
+                               jnp.where(k == 2, c_range, c_in)))
+    lit = jnp.logical_xor(prim, prog.neg[:, :, None])
+    clause_sat = lit & prog.active[:, :, None]
+    t = prog.term_active.shape[1]
+    member = ((prog.term[:, :, None] == jnp.arange(t)[None, None, :])
+              & prog.active[:, :, None])                   # [B,S,T]
+    # [B,T,S,R]: literal holds, or the slot isn't part of this term
+    holds = lit[:, None, :, :] | ~member.transpose(0, 2, 1)[:, :, :, None]
+    term_ok = jnp.all(holds, axis=2) & prog.term_active[:, :, None]
+    return jnp.any(term_ok, axis=1), clause_sat
+
+
+def fused_step_ref(q, x, nb, is_new, prog, labels_g, values_g,
+                   cand_dist, cand_pay, res_dist, res_idx, *,
+                   pre: bool = False, n_clause: int = 4):
+    """Oracle for kernels.fused_step: program eval + masked distances +
+    dual bitonic merge + clause counters."""
+    pvalid, clause_sat = eval_program_ref(prog, labels_g, values_g)
+    valid = pvalid & is_new
+    dist_mask = valid if pre else is_new
+    cs = (clause_sat & is_new[:, None, :]).sum(-1).astype(jnp.int32)
+    s = cs.shape[1]
+    cadd = (cs[:, :n_clause] if s >= n_clause
+            else jnp.pad(cs, ((0, 0), (0, n_clause - s))))
     dd = sqdist_masked_ref(q, x, dist_mask)
     new_pay = jnp.where(dist_mask, nb | (valid.astype(jnp.int32) << 30), -1)
     ocd, ocp = topm_merge_ref(cand_dist, cand_pay, dd, new_pay)
     res_in = jnp.where(valid & dist_mask, dd, INF)
     res_pay = jnp.where(valid & dist_mask, nb, -1)
     ordd, ori = topm_merge_ref(res_dist, res_idx, res_in, res_pay)
-    return ocd, ocp, ordd, ori
+    return ocd, ocp, ordd, ori, valid, cadd
 
 
 def gbdt_predict_ref(feats, feat_idx, thresh, leaf, base, depth):

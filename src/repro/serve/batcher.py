@@ -25,6 +25,11 @@ Opportunistic fill: when a bucket batch has spare lanes, requests waiting in
 *higher* buckets may ride along for a time slice capped at this bucket's
 budget. They make bounded progress without extending the batch (their lane
 budget is clamped to the cap) and are requeued upward afterwards.
+
+Since filters are compiled predicate programs, batches mix requests of any
+boolean structure — FIFO order alone decides who shares a batch. Program
+rows are padded to a shared (slot, term) shape per batch, rounded up to a
+power of two so the jit cache sees a bounded set of program shapes.
 """
 from __future__ import annotations
 
@@ -34,19 +39,32 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.state import concat_lanes, pad_lanes, take_lanes
-from repro.serve.queue import Request, batch_spec, take_kind
+from repro.filters.compile import stack_programs
+from repro.serve.queue import Request, take_requests
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(0, int(n - 1).bit_length())
 
 
 class MicroBatcher:
     def __init__(self, lane_width: int = 16,
                  buckets: tuple = (256, 1024, 4096, None),
-                 fill: bool = True):
+                 fill: bool = True, n_words: int | None = None,
+                 n_values: int | None = None):
         if buckets[-1] is not None:
             buckets = tuple(buckets) + (None,)
         caps = [c for c in buckets[:-1]]
         if any(b >= a for a, b in zip(caps[1:], caps[:-1])):
             raise ValueError(f"bucket caps must be ascending: {buckets}")
         self.lane_width = lane_width
+        # Engine attribute shapes for program compilation (the scheduler
+        # passes them). They MUST match the engine: a mask compiled with
+        # fewer words than the engine's label array broadcasts its word-0
+        # bits across every word — silent false negatives, not a shape
+        # error — so pad_program refuses to guess when they are unset.
+        self.n_words = n_words
+        self.n_values = n_values
         # A short ladder of lane widths bounds jit shapes while letting a
         # partial batch run at its natural width: on CPU/GPU the lockstep
         # per-step cost scales ~linearly with lane count, so an 8-wide
@@ -102,29 +120,26 @@ class MicroBatcher:
         return min(heads) if heads else None
 
     def bucket_heads(self) -> list[tuple[float, int, int]]:
-        """(head arrival, bucket index, head-kind batchable count) per
-        non-empty bucket — the scheduler's dispatch-gating view."""
-        out = []
-        for i, q in enumerate(self._queues):
-            if q:
-                kind = q[0].kind
-                n = sum(1 for r in q if r.kind == kind)
-                out.append((q[0].arrival, i, n))
-        return out
+        """(head arrival, bucket index, batchable count) per non-empty
+        bucket — the scheduler's dispatch-gating view. Any structure
+        batches together, so the count is simply the queue depth."""
+        return [(q[0].arrival, i, len(q))
+                for i, q in enumerate(self._queues) if q]
 
     # ------------------------------------------------------- batch forming ----
     def form_batch(self, bucket: int | None = None,
                    ) -> tuple[int, list[Request], int | None]:
-        """Pop a same-kind batch of up to lane_width requests from `bucket`
-        (default: the non-empty bucket with the oldest head — FIFO-fair
-        across buckets). Returns (bucket index, requests, cap); requests is
-        [] when idle."""
+        """Pop a batch of up to lane_width requests from `bucket` (default:
+        the non-empty bucket with the oldest head — FIFO-fair across
+        buckets). Compiled programs make batches structure-agnostic, so the
+        FIFO prefix is taken as-is. Returns (bucket index, requests, cap);
+        requests is [] when idle."""
         live = [i for i, q in enumerate(self._queues) if q]
         if not live:
             return -1, [], None
         i = (min(live, key=lambda j: self._queues[j][0].arrival)
              if bucket is None else bucket)
-        reqs = take_kind(self._queues[i], None, self.lane_width)
+        reqs = take_requests(self._queues[i], self.lane_width)
         cap = self.buckets[i]
         if not reqs:                  # explicitly-named bucket was empty
             return i, [], cap
@@ -138,13 +153,12 @@ class MicroBatcher:
             # executed < cap: a rider that already reached this cap in an
             # earlier slice would be a no-op lane (dispatch cost, no
             # progress).
-            kind = reqs[0].kind
             for j in range(i + 1, len(self._queues)):
                 if len(reqs) == fill_to:
                     break
-                reqs += take_kind(self._queues[j], kind,
-                                  fill_to - len(reqs),
-                                  pred=lambda r: r.executed < cap)
+                reqs += take_requests(self._queues[j],
+                                      fill_to - len(reqs),
+                                      pred=lambda r: r.executed < cap)
         return i, reqs, cap
 
     # ----------------------------------------------------------- assembly ----
@@ -158,9 +172,29 @@ class MicroBatcher:
         q = np.stack([r.query for r in requests]).astype(np.float32)
         return jnp.asarray(np.pad(q, ((0, width - len(requests)), (0, 0))))
 
-    def pad_spec(self, requests: list[Request], width: int | None = None):
-        return batch_spec(requests,
-                          self.lane_width if width is None else width)
+    def pad_program(self, requests: list[Request], width: int | None = None):
+        """Stack per-request compiled programs into one [width, S, ...]
+        batch program. Slot/term counts pad to the batch max rounded up to
+        a power of two (bounded jit shapes across heterogeneous batches);
+        pad lanes get match-nothing rows — inert under their 0 NDC budget.
+        """
+        from repro.filters.compile import compile_query
+
+        progs = []
+        for r in requests:
+            if r.program is None:  # scheduler stamps this at submit
+                if self.n_words is None or self.n_values is None:
+                    raise ValueError(
+                        "MicroBatcher needs n_words/n_values matching the "
+                        "engine to compile filter programs — construct it "
+                        "with the engine's attribute shapes")
+                r.program = compile_query(r.get_expr(), self.n_words,
+                                          self.n_values)
+            progs.append(r.program)
+        s = _pow2(max(p.n_slots for p in progs))
+        t = _pow2(max(p.n_terms for p in progs))
+        return stack_programs(progs, n_slots=s, n_terms=t,
+                              pad_to=self.lane_width if width is None else width)
 
     def pad_budgets(self, requests: list[Request], cap: int | None,
                     width: int | None = None) -> jnp.ndarray:

@@ -1,13 +1,15 @@
-"""Per-(query, filter-spec) result cache.
+"""Per-(query, filter) result cache.
 
 Keys are SHA-1 digests over the *full byte content* of the query vector and
-the filter, plus the predicate kind tag and every search parameter that
-changes the answer (k, queue size, traversal mode/backend-independent α,
-probe budget). Hashing the raw bytes — not a lossy summary like a mask
-popcount or a range width — is what makes the cache safe under filter-spec
-collisions: a contain mask and an equal mask with identical words, or a
-range whose (lo, hi) float bytes happen to equal a mask's bytes, still map
-to distinct keys because the kind tag is part of the preimage.
+the filter's canonical DNF serialization (`filters.expr.canonical_key`),
+plus every search parameter that changes the answer (k, queue size, α,
+probe budget, …). Canonicalization makes the key semantic up to
+commutativity: `And(a, b)` and `And(b, a)` collide on purpose (same filter,
+same compiled program, same traversal), while `And(a, b)` vs `Or(a, b)`
+and any structural/leaf difference — a contain vs an equal over the same
+labels, a range whose float bytes happen to shadow a label encoding — stay
+distinct because kind tags, negation flags, and exact float hex forms are
+all part of the canonical serialization.
 """
 from __future__ import annotations
 
@@ -16,6 +18,8 @@ from collections import OrderedDict
 
 import numpy as np
 
+from repro.filters.expr import canonical_key
+
 
 def request_key(req, k: int, queue_size: int, alpha: float,
                 probe_budget: int, min_budget: int = 32,
@@ -23,13 +27,8 @@ def request_key(req, k: int, queue_size: int, alpha: float,
                 ablate_filter: bool = False) -> str:
     h = hashlib.sha1()
     h.update(np.ascontiguousarray(req.query, np.float32).tobytes())
-    h.update(b"|kind:%d" % req.kind)
-    if req.label_mask is not None:
-        h.update(b"|mask:")
-        h.update(np.ascontiguousarray(req.label_mask, np.uint32).tobytes())
-    if req.range_lo is not None:
-        h.update(b"|range:")
-        h.update(np.asarray([req.range_lo, req.range_hi], np.float32).tobytes())
+    h.update(b"|filter:")
+    h.update(canonical_key(req.get_expr()))
     h.update(b"|k:%d|m:%d|a:%r|f:%d|lo:%d|hi:%d|np:%d|abl:%d"
              % (k, queue_size, alpha, probe_budget, min_budget, max_budget,
                 n_probes, ablate_filter))

@@ -1,11 +1,19 @@
 """Request model + admission layer (serving lifecycle stage 1).
 
-A `Request` is one (query vector, filter) pair with an arrival timestamp and
-an optional latency deadline. The `AdmissionQueue` is the system's only
-*bounded* queue: it sheds load when full (backpressure — the caller gets a
-`False` and is expected to retry/degrade upstream) and rejects requests whose
-deadline already expired on arrival. Everything behind admission (bucket
-queues) is unbounded: admitted work is always finished.
+A `Request` is one (query vector, filter expression) pair with an arrival
+timestamp and an optional latency deadline. Filters are filter-algebra
+expressions (`repro.filters.expr`) — arbitrary And/Or/Not compositions; the
+legacy (kind, label_mask / range) fields remain as constructor sugar and are
+lowered to an expression on construction. Because the engine compiles any
+batch of expressions into one fixed-shape predicate program, the scheduler
+batches requests of *different boolean structure* into the same lanes —
+there is no same-kind batching restriction anywhere in the serving path.
+
+The `AdmissionQueue` is the system's only *bounded* queue: it sheds load
+when full (backpressure — the caller gets a `False` and is expected to
+retry/degrade upstream) and rejects requests whose deadline already expired
+on arrival. Everything behind admission (bucket queues) is unbounded:
+admitted work is always finished.
 
 Timestamps are plain floats in caller-defined units. The scheduler never
 reads a wall clock itself — `launch/serve.py` feeds `time.perf_counter()`
@@ -19,7 +27,8 @@ from collections import deque
 
 import numpy as np
 
-from repro.filters.predicates import FilterSpec, PRED_RANGE
+from repro.filters.expr import Contain, Equal, Expr, Range, labels_from_mask
+from repro.filters.predicates import PRED_CONTAIN, PRED_EQUAL, PRED_RANGE
 
 
 @dataclasses.dataclass
@@ -28,10 +37,12 @@ class Request:
 
     rid: int
     query: np.ndarray                 # [d] float32
-    kind: int                         # predicate tag (static per request)
-    label_mask: np.ndarray | None = None   # [W] uint32 (label predicates)
-    range_lo: float | None = None          # (range predicate)
+    kind: int | None = None           # legacy predicate tag (sugar)
+    label_mask: np.ndarray | None = None   # [W] uint32 (legacy label sugar)
+    range_lo: float | None = None          # (legacy range sugar)
     range_hi: float | None = None
+    expr: Expr | None = None          # the filter; derived from the legacy
+                                      # fields when not given directly
     arrival: float | None = None      # stamped at submit() when unset
     deadline: float | None = None     # absolute time; None = best-effort
 
@@ -39,6 +50,10 @@ class Request:
     state: tuple | None = None        # carried traversal state: a (batch
                                       # SearchState, lane index) reference
                                       # into the micro-batch it last rode in
+    program: object | None = None     # compiled single-query FilterProgram
+                                      # (stamped by the scheduler at submit)
+    cache_key: str | None = None      # memoized result-cache key (valid for
+                                      # one scheduler's parameter set)
     budget: int | None = None         # Ŵ_q once estimated
     executed: int = 0                 # budget target reached so far
     n_slices: int = 0                 # resume batches this request rode in
@@ -49,20 +64,48 @@ class Request:
     res_dist: np.ndarray | None = None
     ndc: int | None = None
 
+    def __post_init__(self):
+        if self.expr is None and (self.label_mask is not None
+                                  or self.range_lo is not None):
+            self.expr = self._legacy_expr()
+
+    def get_expr(self) -> Expr:
+        """The filter expression, deriving from legacy fields on demand
+        (callers may populate label_mask / range bounds post-construction)."""
+        if self.expr is None:
+            self.expr = self._legacy_expr()
+        return self.expr
+
+    def _legacy_expr(self) -> Expr:
+        if self.kind == PRED_RANGE:
+            return Range(float(self.range_lo), float(self.range_hi))
+        if self.kind in (PRED_CONTAIN, PRED_EQUAL):
+            leaf = Contain if self.kind == PRED_CONTAIN else Equal
+            return leaf(labels_from_mask(self.label_mask))
+        raise ValueError(
+            f"request {self.rid}: provide expr= or a legacy predicate kind")
+
 
 def requests_from_workload(wl, start_rid: int = 0, arrivals=None,
                            deadline: float | None = None) -> list[Request]:
     """Explode a batched QueryWorkload into per-request objects."""
     out = []
+    exprs = getattr(wl, "exprs", None)
     for i in range(wl.batch):
-        kind = wl.spec.kind
-        if kind == PRED_RANGE:
-            req = Request(rid=start_rid + i, query=wl.queries[i], kind=kind,
-                          range_lo=float(wl.spec.range_lo[i]),
-                          range_hi=float(wl.spec.range_hi[i]))
+        if exprs is not None:
+            req = Request(rid=start_rid + i, query=wl.queries[i],
+                          expr=exprs[i])
         else:
-            req = Request(rid=start_rid + i, query=wl.queries[i], kind=kind,
-                          label_mask=np.asarray(wl.spec.label_masks[i]))
+            kind = wl.spec.kind
+            if kind == PRED_RANGE:
+                req = Request(rid=start_rid + i, query=wl.queries[i],
+                              kind=kind,
+                              range_lo=float(wl.spec.range_lo[i]),
+                              range_hi=float(wl.spec.range_hi[i]))
+            else:
+                req = Request(rid=start_rid + i, query=wl.queries[i],
+                              kind=kind,
+                              label_mask=np.asarray(wl.spec.label_masks[i]))
         if arrivals is not None:
             req.arrival = float(arrivals[i])
         if deadline is not None:
@@ -74,36 +117,20 @@ def requests_from_workload(wl, start_rid: int = 0, arrivals=None,
     return out
 
 
-def batch_spec(requests: list[Request], pad_to: int) -> FilterSpec:
-    """Stack single-request filters (all the same kind) into a padded batch
-    spec. Pad lanes get all-zero filters — they are inert because the batcher
-    assigns them a 0 NDC budget."""
-    kind = requests[0].kind
-    pad = pad_to - len(requests)
-    assert pad >= 0 and all(r.kind == kind for r in requests)
-    if kind == PRED_RANGE:
-        lo = np.asarray([r.range_lo for r in requests], np.float32)
-        hi = np.asarray([r.range_hi for r in requests], np.float32)
-        return FilterSpec(kind, None, np.pad(lo, (0, pad)), np.pad(hi, (0, pad)))
-    masks = np.stack([r.label_mask for r in requests]).astype(np.uint32)
-    return FilterSpec(kind, np.pad(masks, ((0, pad), (0, 0))), None, None)
+def take_requests(q: deque, limit: int, pred=None) -> list[Request]:
+    """Pop up to `limit` requests from a deque in FIFO order; `pred`
+    optionally restricts eligibility (ineligible requests keep their
+    position). Shared by the admission queue and the bucket batcher.
 
-
-def take_kind(q: deque, kind: int | None, limit: int, pred=None,
-              ) -> list[Request]:
-    """Pop up to `limit` same-kind requests from a deque, preserving FIFO
-    order within the kind (the traversal config is static per predicate
-    kind, so a micro-batch cannot mix kinds). kind=None adopts the first
-    eligible request's kind; `pred` optionally restricts eligibility.
-    Shared by the admission queue and the bucket batcher — the
-    pull-from-anywhere-FIFO invariant lives in exactly one place."""
+    Compiled predicate programs make micro-batches structure-agnostic, so
+    unlike the pre-algebra serving path there is no same-kind constraint —
+    any FIFO prefix batches together.
+    """
     taken, kept = [], deque()
     while q:
         r = q.popleft()
-        if (len(taken) < limit and (kind is None or r.kind == kind)
-                and (pred is None or pred(r))):
+        if len(taken) < limit and (pred is None or pred(r)):
             taken.append(r)
-            kind = r.kind
         else:
             kept.append(r)
     q.extend(kept)
@@ -135,6 +162,6 @@ class AdmissionQueue:
         self._q.append(req)
         return True
 
-    def take_kind_group(self, limit: int) -> list[Request]:
-        """Pop up to `limit` requests sharing the head's predicate kind."""
-        return take_kind(self._q, None, limit)
+    def take_group(self, limit: int) -> list[Request]:
+        """Pop up to `limit` requests (any filter structure) FIFO."""
+        return take_requests(self._q, limit)

@@ -4,8 +4,10 @@ Turns the paper's per-query cost signal Ŵ_q into *system* behavior. The
 request lifecycle:
 
   admit      bounded AdmissionQueue (backpressure + deadline checks), with a
-             result-cache lookup in front
-  probe      micro-batch of same-predicate requests runs the shared early
+             result-cache lookup in front; the filter expression is
+             compiled to its canonical predicate program here, once
+  probe      micro-batch of requests — *any* mix of filter structures, the
+             compiled programs are batch-uniform — runs the shared early
              probe (the first f NDCs of the real traversal — identical code
              path to `e2e_search`)
   estimate   GBDT on probe features → Ŵ_q per request (`predict_budgets`,
@@ -91,7 +93,9 @@ class CostAwareScheduler:
         self.timer = timer
         self.ingress = AdmissionQueue(serve_cfg.queue_capacity)
         self.batcher = MicroBatcher(serve_cfg.lane_width, serve_cfg.buckets,
-                                    serve_cfg.fill)
+                                    serve_cfg.fill,
+                                    n_words=engine.n_words,
+                                    n_values=engine.n_values)
         self.cache = (ResultCache(serve_cfg.cache_capacity)
                       if serve_cfg.cache_capacity else None)
         self.metrics = ServeMetrics()
@@ -99,15 +103,22 @@ class CostAwareScheduler:
 
     # ------------------------------------------------------------- ingress ----
     def _key(self, req: Request) -> str:
-        s = self.scfg
-        return request_key(req, self.cfg.k, self.cfg.queue_size, s.alpha,
-                           s.probe_budget, s.min_budget, s.max_budget,
-                           s.n_probes, s.ablate_filter)
+        # memoized on the request: the canonical-DNF serialization inside
+        # request_key is a recursive Python walk, and the key is needed
+        # twice per served request (submit lookup + completion put)
+        if req.cache_key is None:
+            s = self.scfg
+            req.cache_key = request_key(
+                req, self.cfg.k, self.cfg.queue_size, s.alpha,
+                s.probe_budget, s.min_budget, s.max_budget, s.n_probes,
+                s.ablate_filter)
+        return req.cache_key
 
     def submit(self, req: Request, now: float) -> str:
         """Returns "hit" | "queued" | "shed" | "expired"."""
         req.arrival = now if req.arrival is None else req.arrival
         if self.cache is not None:
+            # keyed on the canonical expression, so hits never pay compile
             hit = self.cache.get(self._key(req))
             if hit is not None:
                 req.res_idx, req.res_dist, req.ndc = hit
@@ -115,6 +126,19 @@ class CostAwareScheduler:
                 req.completed = now
                 self.metrics.complete(req)
                 return "hit"
+        if req.program is None and len(self.ingress) < self.ingress.capacity:
+            # compile once per request, BEFORE admission: an expression the
+            # compiler rejects (label outside the alphabet, DNF blow-up)
+            # must raise here, while nothing is queued — compiling after
+            # offer() would leave a poisoned request that crashes the pump.
+            # Every micro-batch the request rides in stacks this row (the
+            # canonical DNF makes it deterministic). The capacity pre-check
+            # keeps the overload shed path O(1): a request the bounded
+            # queue is about to reject never pays the DNF walk.
+            from repro.filters.compile import compile_query
+
+            req.program = compile_query(req.get_expr(), self.engine.n_words,
+                                        self.engine.n_values)
         if not self.ingress.offer(req, now):
             return "expired" if (req.deadline is not None
                                  and now > req.deadline) else "shed"
@@ -186,19 +210,14 @@ class CostAwareScheduler:
         return now
 
     # ---------------------------------------------------------- internals ----
-    def _cfg_for(self, kind: int) -> SearchConfig:
-        if self.cfg.pred_kind == kind:
-            return self.cfg
-        return dataclasses.replace(self.cfg, pred_kind=kind)
-
     def _pump_probe(self, now: float) -> tuple[list[Request], float]:
         scfg = self.scfg
-        reqs = self.ingress.take_kind_group(self.batcher.lane_width)
-        cfg = self._cfg_for(reqs[0].kind)
+        reqs = self.ingress.take_group(self.batcher.lane_width)
+        cfg = self.cfg  # one static config serves every filter structure
         t0 = self.timer()
         width = self.batcher.width_for(len(reqs))
         queries = self.batcher.pad_queries(reqs, width)
-        spec = self.batcher.pad_spec(reqs, width)
+        prog = self.batcher.pad_program(reqs, width)
         lane_on = np.zeros(width, np.int32)
         lane_on[: len(reqs)] = 1
 
@@ -207,7 +226,7 @@ class CostAwareScheduler:
         # Sharing the code, not just the schedule, is what keeps the
         # scheduled == one-shot bit-identity from desynchronizing.
         st, feats = probe_and_features(
-            self.engine, cfg, queries, spec,
+            self.engine, cfg, queries, prog,
             jnp.asarray(lane_on * scfg.probe_budget), n_probes=scfg.n_probes)
 
         # Stage 2 — cost estimate (same path as one-shot e2e_search).
@@ -244,17 +263,17 @@ class CostAwareScheduler:
         idx, reqs, cap = self.batcher.form_batch(bucket)
         if not reqs:
             return [], 0.0
-        cfg = self._cfg_for(reqs[0].kind)
+        cfg = self.cfg
         t0 = self.timer()
         width = self.batcher.width_for(len(reqs))
         queries = self.batcher.pad_queries(reqs, width)
-        spec = self.batcher.pad_spec(reqs, width)
+        prog = self.batcher.pad_program(reqs, width)
         budgets = self.batcher.pad_budgets(reqs, cap, width)
         state = self.batcher.pad_states(reqs, width)
 
         # Stage 3 — adaptive termination, bounded by the bucket cap.
         entry_hops = np.asarray(state.hops)
-        out = self.engine.search(cfg, queries, spec, budgets, state=state)
+        out = self.engine.search(cfg, queries, prog, budgets, state=state)
         jax.block_until_ready(out)
         res_idx = np.asarray(out.res_idx)
         res_dist = np.asarray(out.res_dist)

@@ -1,0 +1,207 @@
+"""Filter algebra + compiler: canonicalization laws, compiled-program parity
+vs the naive host oracle (property-based), single-clause bit-identity vs the
+legacy FilterSpec path on both traversal backends, chunked selectivity."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st  # hypothesis or fallback
+
+from repro.filters import (And, Contain, Equal, In, Not, Or, Range,
+                           FilterProgram, FilterSpec, PRED_CONTAIN, PRED_EQUAL,
+                           PRED_RANGE, canonical_dnf, canonical_key,
+                           compile_filters, compile_spec, eval_expr,
+                           eval_program_gathered, filter_matrix,
+                           labels_from_mask, pack_labels, selectivity)
+
+ALPHABET = 64   # 2 mask words
+N_WORDS = 2
+N_VALUES = 2
+
+
+def _world(rng, n=160):
+    labels = rng.integers(0, 1 << 32, (n, N_WORDS), dtype=np.uint32)
+    values = rng.random((n, N_VALUES)).astype(np.float32)
+    return labels, values
+
+
+def _random_expr(rng, depth=2):
+    """Random expression tree over the full algebra."""
+    if depth == 0 or rng.random() < 0.4:
+        c = int(rng.integers(0, 4))
+        if c == 0:
+            return Contain(rng.integers(0, ALPHABET, int(rng.integers(0, 3))))
+        if c == 1:
+            return Equal(rng.integers(0, ALPHABET, int(rng.integers(0, 3))))
+        if c == 2:
+            return In(rng.integers(0, ALPHABET, int(rng.integers(0, 3))))
+        lo = float(rng.random())
+        return Range(lo, lo + 0.6 * float(rng.random()),
+                     attr=int(rng.integers(0, N_VALUES)))
+    kind = int(rng.integers(0, 3))
+    if kind == 2:
+        return Not(_random_expr(rng, depth - 1))
+    kids = [_random_expr(rng, depth - 1)
+            for _ in range(int(rng.integers(1, 4)))]
+    return And(*kids) if kind == 0 else Or(*kids)
+
+
+def _eval_compiled(exprs, labels, values):
+    """Compile a batch and evaluate it over the whole corpus at once."""
+    prog = compile_filters(exprs, N_WORDS, N_VALUES)
+    prog = FilterProgram(*(jnp.asarray(a) for a in prog))
+    b = len(exprs)
+    lg = jnp.broadcast_to(jnp.asarray(labels)[None], (b,) + labels.shape)
+    vg = jnp.broadcast_to(jnp.asarray(values)[None], (b,) + values.shape)
+    valid, _ = eval_program_gathered(prog, lg, vg)
+    return np.asarray(valid)
+
+
+# ----------------------------------------------------- compiled vs oracle ----
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), batch=st.integers(1, 6))
+def test_compiled_program_matches_host_oracle(seed, batch):
+    """Property: for random expression batches (heterogeneous structure),
+    the compiled fixed-shape program equals the naive recursive evaluator
+    on every item — the tentpole's correctness core."""
+    rng = np.random.default_rng(seed)
+    labels, values = _world(rng)
+    exprs = [_random_expr(rng) for _ in range(batch)]
+    got = _eval_compiled(exprs, labels, values)
+    want = np.stack([eval_expr(e, labels, values) for e in exprs])
+    np.testing.assert_array_equal(got, want, err_msg=repr(exprs))
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_canonicalization_laws(seed):
+    """Commutativity collides; double negation is identity; De Morgan holds
+    both semantically (oracle) and canonically (key equality)."""
+    rng = np.random.default_rng(seed)
+    labels, values = _world(rng, n=80)
+    a, b = _random_expr(rng, 1), _random_expr(rng, 1)
+    assert canonical_key(And(a, b)) == canonical_key(And(b, a))
+    assert canonical_key(Or(a, b)) == canonical_key(Or(b, a))
+    assert canonical_key(Not(Not(a))) == canonical_key(a)
+    assert canonical_key(Not(And(a, b))) == canonical_key(Or(Not(a), Not(b)))
+    # canonical equivalence must imply semantic equivalence
+    np.testing.assert_array_equal(
+        eval_expr(Not(And(a, b)), labels, values),
+        eval_expr(Or(Not(a), Not(b)), labels, values))
+
+
+def test_canonical_keys_distinguish_structure():
+    a, b = Contain([3]), Range(0.2, 0.8)
+    assert canonical_key(And(a, b)) != canonical_key(Or(a, b))
+    assert canonical_key(a) != canonical_key(Not(a))
+    assert canonical_key(Contain([3])) != canonical_key(Equal([3]))
+    assert canonical_key(Contain([3])) != canonical_key(In([3]))
+    assert canonical_key(Range(0.2, 0.8)) != canonical_key(Range(0.2, 0.8, attr=1))
+
+
+def test_degenerate_expressions():
+    rng = np.random.default_rng(0)
+    labels, values = _world(rng, n=50)
+    cases = {
+        Contain(()): True,     # ⊆ of the empty set
+        In(()): False,         # any-of nothing
+        Or(): False,           # empty disjunction
+        And(): True,           # empty conjunction
+        And(Contain([3]), Not(Contain([3]))): False,  # contradiction
+        Or(Contain([3]), Not(Contain([3]))): True,    # tautology
+    }
+    got = _eval_compiled(list(cases), labels, values)
+    for i, (e, const) in enumerate(cases.items()):
+        assert (got[i] == const).all(), e
+        np.testing.assert_array_equal(got[i], eval_expr(e, labels, values))
+
+
+def test_labels_from_mask_roundtrip():
+    for labs in [(), (0,), (31, 32, 63), (5, 17, 40)]:
+        mask = pack_labels([labs], ALPHABET)[0]
+        assert labels_from_mask(mask) == labs
+
+
+# -------------------------------------------- legacy FilterSpec bit-identity ----
+@pytest.fixture(scope="module")
+def world():
+    from repro.core import SearchConfig, SearchEngine
+    from repro.data import make_dataset
+    from repro.index import build_graph_index
+
+    ds = make_dataset(n=2500, dim=24, n_clusters=6, alphabet_size=32, seed=0)
+    graph = build_graph_index(ds.vectors, degree=16, seed=0)
+    return ds, SearchEngine.build(ds, graph), SearchConfig(k=5, queue_size=64)
+
+
+@pytest.mark.parametrize("backend", ["dense", "pallas"])
+@pytest.mark.parametrize("kind", ["contain", "equal", "range"])
+def test_single_clause_bit_identity_vs_filterspec(world, backend, kind):
+    """The acceptance bar: a single-clause compiled program (via the
+    FilterSpec.to_expr shim) returns bit-identical top-k ids, distances,
+    NDC, and every counter to the legacy FilterSpec entry point, on both
+    traversal backends."""
+    from repro.data import make_label_workload, make_range_workload
+
+    ds, engine, cfg = world
+    cfg = dataclasses.replace(cfg, backend=backend)
+    wl = (make_range_workload(ds, batch=12, seed=4) if kind == "range"
+          else make_label_workload(ds, batch=12, kind=kind, seed=4))
+    via_spec = engine.search(cfg, wl.queries, wl.spec, 1200)
+    via_expr = engine.search(cfg, wl.queries, wl.spec.to_expr(), 1200)
+    for field in ("res_idx", "res_dist", "cnt", "cand_idx", "n_inspected",
+                  "n_valid_visited", "hops"):
+        np.testing.assert_array_equal(
+            np.asarray(getattr(via_spec, field)),
+            np.asarray(getattr(via_expr, field)), err_msg=field)
+
+
+def test_spec_compile_matches_expr_compile():
+    """compile_spec (vectorized) == compile_filters(spec.to_expr())."""
+    rng = np.random.default_rng(3)
+    masks = rng.integers(0, 1 << 16, (6, N_WORDS), dtype=np.uint32)
+    for kind in (PRED_CONTAIN, PRED_EQUAL):
+        spec = FilterSpec(kind, masks)
+        a = compile_spec(spec, N_WORDS, N_VALUES)
+        b = compile_filters(spec.to_expr(), N_WORDS, N_VALUES)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    lo = rng.random(6).astype(np.float32)
+    spec = FilterSpec(PRED_RANGE, None, lo, lo + 0.25)
+    a = compile_spec(spec, N_WORDS, N_VALUES)
+    b = compile_filters(spec.to_expr(), N_WORDS, N_VALUES)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# --------------------------------------------------- selectivity chunking ----
+def test_selectivity_chunking_equivalent():
+    """The [B, N, W]-blowup fix: chunked evaluation must be exact, for both
+    FilterSpec batches and expression lists, at every chunk/batch ratio."""
+    rng = np.random.default_rng(1)
+    labels, values = _world(rng, n=300)
+    masks = rng.integers(0, 1 << 10, (17, N_WORDS), dtype=np.uint32)
+    spec = FilterSpec(PRED_CONTAIN, masks)
+    exprs = [_random_expr(rng) for _ in range(17)]
+    for filt in (spec, exprs):
+        full = selectivity(filt, labels, values, chunk=10**9)
+        for chunk in (1, 4, 16, 17, 64):
+            np.testing.assert_array_equal(
+                selectivity(filt, labels, values, chunk=chunk), full)
+    # and the chunked oracle agrees with the per-query matrix
+    np.testing.assert_allclose(
+        selectivity(exprs, labels, values, chunk=5),
+        filter_matrix(exprs, labels, values).mean(axis=1))
+
+
+def test_filter_matrix_handles_single_channel_values():
+    """Legacy [N] value arrays keep working for FilterSpec ranges."""
+    rng = np.random.default_rng(2)
+    v1 = rng.random(100).astype(np.float32)
+    spec = FilterSpec(PRED_RANGE, None, np.asarray([0.2], np.float32),
+                      np.asarray([0.7], np.float32))
+    a = filter_matrix(spec, None, v1)
+    b = filter_matrix(spec, None, np.stack([v1, rng.random(100)], axis=1))
+    np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(a[0], (v1 >= 0.2) & (v1 <= 0.7))

@@ -119,44 +119,89 @@ def test_topm_merge_kernel_interpret_micro():
     np.testing.assert_array_equal(np.asarray(gp), np.asarray(wp))
 
 
+def _random_program_batch(rng, b, n_words, n_values, max_slots=3,
+                          max_terms=2):
+    """Random compiled programs (via random expressions) + gathered attrs."""
+    from repro.filters.compile import FilterProgram, compile_filters
+    from repro.filters.expr import And, Contain, In, Not, Or, Range
+
+    def leaf():
+        c = rng.integers(0, 4)
+        if c == 0:
+            return Contain(rng.integers(0, 32 * n_words, rng.integers(1, 3)))
+        if c == 1:
+            return In(rng.integers(0, 32 * n_words, rng.integers(1, 3)))
+        lo = float(rng.random())
+        return Range(lo, lo + float(rng.random()) * 0.5,
+                     attr=int(rng.integers(0, n_values)))
+
+    def expr():
+        leaves = [leaf() for _ in range(int(rng.integers(1, max_slots + 1)))]
+        leaves = [Not(l) if rng.random() < 0.3 else l for l in leaves]
+        comb = And(*leaves) if rng.random() < 0.5 else Or(*leaves)
+        return comb
+
+    prog = compile_filters([expr() for _ in range(b)], n_words, n_values,
+                           n_terms=max_terms)
+    return FilterProgram(*(jnp.asarray(a) for a in prog))
+
+
+def _fused_attrs(rng, b, r, n_words, n_values):
+    labels = jnp.asarray(
+        rng.integers(0, 1 << 32, (b, r, n_words), dtype=np.uint32))
+    values = jnp.asarray(rng.random((b, r, n_values)).astype(np.float32))
+    return labels, values
+
+
 def test_fused_step_kernel_interpret_micro():
-    """Same for the fused traversal-step kernel body."""
+    """Execute the actual fused kernel body (interpret mode): in-kernel
+    program evaluation + distances + dual merge at a width small enough
+    for XLA:CPU to compile the unrolled network."""
     from repro.kernels.fused_step import fused_step
 
     rng = np.random.default_rng(4)
-    b, m, r, k, d = 4, 8, 4, 2, 8  # wq=16 (10 stages), wr=8 (6 stages)
+    b, m, r, k, d, w, v = 4, 8, 4, 2, 8, 2, 2  # wq=16, wr=8
     q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
     x = jnp.asarray(rng.normal(size=(b, r, d)).astype(np.float32))
     nb = jnp.asarray(rng.integers(0, 1 << 20, (b, r)).astype(np.int32))
-    dmask = jnp.asarray(rng.random((b, r)) < 0.8)
-    vmask = jnp.asarray(rng.random((b, r)) < 0.5) & dmask
+    is_new = jnp.asarray(rng.random((b, r)) < 0.8)
+    prog = _random_program_batch(rng, b, w, v)
+    labels, values = _fused_attrs(rng, b, r, w, v)
     cd = jnp.asarray(np.sort(rng.random((b, m)).astype(np.float32) * 50, axis=1))
     cp = jnp.asarray(rng.integers(0, 1 << 20, (b, m)).astype(np.int32))
     rd = jnp.asarray(np.sort(rng.random((b, k)).astype(np.float32) * 50, axis=1))
     ri = jnp.asarray(rng.integers(0, 1 << 20, (b, k)).astype(np.int32))
-    got = fused_step(q, x, nb, dmask, vmask, cd, cp, rd, ri, interpret=True)
-    want = ref.fused_step_ref(q, x, nb, dmask, vmask, cd, cp, rd, ri)
-    for g, w in zip(got, want):
-        g, w = np.asarray(g), np.asarray(w)
-        if g.dtype == np.float32:
-            finite = np.isfinite(w)
-            np.testing.assert_allclose(g[finite], w[finite], rtol=1e-5, atol=1e-5)
-            assert np.isinf(g[~finite]).all()
-        else:
-            np.testing.assert_array_equal(g, w)
+    for pre in (False, True):
+        got = fused_step(q, x, nb, is_new, prog, labels, values, cd, cp, rd,
+                         ri, pre=pre, interpret=True)
+        want = ref.fused_step_ref(q, x, nb, is_new, prog, labels, values, cd,
+                                  cp, rd, ri, pre=pre)
+        for g, w_ in zip(got, want):
+            g, w_ = np.asarray(g), np.asarray(w_)
+            if g.dtype == np.float32:
+                finite = np.isfinite(w_)
+                np.testing.assert_allclose(g[finite], w_[finite], rtol=1e-5,
+                                           atol=1e-5)
+                assert np.isinf(g[~finite]).all()
+            else:
+                np.testing.assert_array_equal(g, w_)
 
 
 # ------------------------------------------------------------ fused step ----
 @pytest.mark.parametrize("b,m,r,k,d", [(4, 32, 8, 5, 12), (8, 128, 32, 10, 24),
                                        (3, 64, 17, 7, 33)])
-def test_fused_step_vs_ref(b, m, r, k, d):
-    """ops.fused_traversal_step == ref oracle (distances + dual merge)."""
+@pytest.mark.parametrize("pre", [False, True])
+def test_fused_step_vs_ref(b, m, r, k, d, pre):
+    """ops.fused_traversal_step == ref oracle (program + distances + dual
+    merge + clause counters)."""
     rng = np.random.default_rng(b * 100 + m + r)
+    w, v = 2, 2
     q = jnp.asarray(rng.normal(size=(b, d)).astype(np.float32))
     x = jnp.asarray(rng.normal(size=(b, r, d)).astype(np.float32))
     nb = jnp.asarray(rng.integers(0, 1 << 20, (b, r)).astype(np.int32))
-    dmask = jnp.asarray(rng.random((b, r)) < 0.8)
-    vmask = jnp.asarray(rng.random((b, r)) < 0.5) & dmask
+    is_new = jnp.asarray(rng.random((b, r)) < 0.8)
+    prog = _random_program_batch(rng, b, w, v)
+    labels, values = _fused_attrs(rng, b, r, w, v)
     cd = np.sort(rng.random((b, m)).astype(np.float32) * 50, axis=1)
     cd[:, m // 2:] = np.inf  # half-empty buffer
     cp = rng.integers(0, 1 << 20, (b, m)).astype(np.int32)
@@ -166,20 +211,20 @@ def test_fused_step_vs_ref(b, m, r, k, d):
     ri = rng.integers(0, 1 << 20, (b, k)).astype(np.int32)
     ri[np.isinf(rd)] = -1
 
-    args = (q, x, nb, dmask, vmask, jnp.asarray(cd), jnp.asarray(cp),
-            jnp.asarray(rd), jnp.asarray(ri))
-    got = ops.fused_traversal_step(*args)
-    want = ref.fused_step_ref(*args)
-    for g, w, name in zip(got, want, ("cand_dist", "cand_pay",
-                                      "res_dist", "res_idx")):
-        g, w = np.asarray(g), np.asarray(w)
+    args = (q, x, nb, is_new, prog, labels, values, jnp.asarray(cd),
+            jnp.asarray(cp), jnp.asarray(rd), jnp.asarray(ri))
+    got = ops.fused_traversal_step(*args, pre=pre)
+    want = ref.fused_step_ref(*args, pre=pre)
+    for g, w_, name in zip(got, want, ("cand_dist", "cand_pay", "res_dist",
+                                       "res_idx", "valid", "clause_add")):
+        g, w_ = np.asarray(g), np.asarray(w_)
         if g.dtype == np.float32:
-            finite = np.isfinite(w)
-            np.testing.assert_allclose(g[finite], w[finite], rtol=1e-5,
+            finite = np.isfinite(w_)
+            np.testing.assert_allclose(g[finite], w_[finite], rtol=1e-5,
                                        atol=1e-5, err_msg=name)
             assert np.isinf(g[~finite]).all(), name
         else:
-            np.testing.assert_array_equal(g, w, err_msg=name)
+            np.testing.assert_array_equal(g, w_, err_msg=name)
     # sortedness invariant on both output buffers
     for gd in (np.asarray(got[0]), np.asarray(got[2])):
         assert (np.diff(gd, axis=1)[np.isfinite(gd[:, 1:])] >= 0).all()

@@ -1,5 +1,6 @@
 """Cost-aware serving subsystem: batcher invariants, bucket routing,
-scheduled-vs-oneshot bit-identity, cache correctness, admission control."""
+scheduled-vs-oneshot bit-identity (incl. mixed-boolean-structure batches),
+cache correctness, admission control."""
 import dataclasses
 import json
 
@@ -8,7 +9,9 @@ import pytest
 
 from repro.core import (CostEstimator, SearchConfig, SearchEngine, e2e_search,
                         generate_training_data)
-from repro.data import make_dataset, make_label_workload, make_range_workload
+from repro.data import (make_composite_workload, make_dataset,
+                        make_label_workload, make_range_workload)
+from repro.filters import And, Contain, Not, Or, Range
 from repro.filters.predicates import PRED_CONTAIN, PRED_EQUAL, PRED_RANGE
 from repro.index import build_graph_index
 from repro.serve import (AdmissionQueue, CostAwareScheduler, MicroBatcher,
@@ -42,27 +45,41 @@ def _req(rid, kind=PRED_CONTAIN, budget=None, arrival=0.0, dim=4, words=1):
 
 # -------------------------------------------------------------- batcher ----
 def test_batcher_padding_invariants():
-    b = MicroBatcher(lane_width=8, buckets=(100, None))
+    b = MicroBatcher(lane_width=8, buckets=(100, None), n_words=1, n_values=1)
     reqs = [_req(i, budget=50, arrival=i) for i in range(3)]
     q = np.asarray(b.pad_queries(reqs))
     assert q.shape == (8, 4)
     assert (q[3:] == 0).all()                       # pad lanes zeroed
-    spec = b.pad_spec(reqs)
-    assert spec.label_masks.shape == (8, 1)
-    assert (spec.label_masks[3:] == 0).all()
+    prog = b.pad_program(reqs)
+    assert prog.masks.shape == (8, 1, 1)            # 3 single-clause + pads
+    assert (np.asarray(prog.masks)[3:] == 0).all()
+    # pad lanes are match-nothing: no active term → valid ≡ False
+    assert not np.asarray(prog.term_active)[3:].any()
+    assert np.asarray(prog.term_active)[:3].all()
     budgets = np.asarray(b.pad_budgets(reqs, cap=None))
     assert budgets.shape == (8,)
     assert (budgets[:3] == 50).all() and (budgets[3:] == 0).all()
 
 
-def test_batcher_no_mixed_kind_batches():
-    b = MicroBatcher(lane_width=4, buckets=(100, None), fill=True)
-    for i, kind in enumerate([PRED_CONTAIN, PRED_RANGE, PRED_CONTAIN]):
-        b.enqueue(_req(i, kind=kind, budget=50, arrival=i))
+def test_batcher_mixes_filter_structures():
+    """Compiled programs erase the same-kind restriction: one FIFO batch
+    carries label, range, and composite filters together."""
+    b = MicroBatcher(lane_width=4, buckets=(100, None), fill=True,
+                     n_words=1, n_values=1)
+    b.enqueue(_req(0, kind=PRED_CONTAIN, budget=50, arrival=0.0))
+    b.enqueue(_req(1, kind=PRED_RANGE, budget=50, arrival=1.0))
+    r2 = Request(rid=2, query=np.zeros(4, np.float32), arrival=2.0,
+                 expr=And(Contain([1]), Range(0.1, 0.9)))
+    r2.budget = 50
+    b.enqueue(r2)
     _, reqs, _ = b.form_batch()
-    assert [r.rid for r in reqs] == [0, 2]           # FIFO within kind
-    _, reqs, _ = b.form_batch()
-    assert [r.rid for r in reqs] == [1]
+    assert [r.rid for r in reqs] == [0, 1, 2]        # strict FIFO, one batch
+    prog = b.pad_program(reqs, width=4)
+    # slot shape covers the widest program (the 2-clause conjunction),
+    # rounded to a power of two
+    assert prog.n_slots == 2 and prog.batch == 4
+    active = np.asarray(prog.active)
+    assert active.sum(axis=1).tolist() == [1, 1, 2, 0]
 
 
 def test_bucket_routing_deterministic():
@@ -198,6 +215,36 @@ def test_scheduled_mixed_kinds_equal_per_kind_oneshot(world):
                                   np.asarray(one_r.state.res_idx))
 
 
+def test_scheduled_mixed_structures_equal_oneshot(world):
+    """Mixed-boolean-structure batch (And/Or/Not composites + bare leaves
+    interleaved): the scheduler batches them into shared lanes and the
+    results stay bit-identical to one-shot `e2e_search` over the same
+    workload — the compiled-program generalization of the serving
+    subsystem's core guarantee."""
+    ds, engine, cfg, est = world
+    wl = make_composite_workload(ds, batch=20, structure="mixed", seed=77)
+    one = e2e_search(engine, est, cfg, wl.queries, wl.exprs, probe_budget=48,
+                     alpha=1.5)
+    sched = CostAwareScheduler(engine, est, cfg, ServeConfig(
+        lane_width=8, buckets=(128, 512, None), probe_budget=48, alpha=1.5,
+        cache_capacity=0))
+    reqs = requests_from_workload(wl)
+    for r in reqs:
+        assert sched.submit(r, 0.0) == "queued"
+    sched.run_until_idle(0.0)
+    reqs.sort(key=lambda r: r.rid)
+    # probe batches mixed at least two different program structures
+    assert len({r.program.n_slots for r in reqs}) > 1
+    np.testing.assert_array_equal(
+        np.stack([r.res_idx for r in reqs]), np.asarray(one.state.res_idx))
+    np.testing.assert_array_equal(
+        np.stack([r.res_dist for r in reqs]), np.asarray(one.state.res_dist))
+    np.testing.assert_array_equal(
+        np.asarray([r.ndc for r in reqs]), np.asarray(one.state.cnt))
+    np.testing.assert_array_equal(
+        np.asarray([r.budget for r in reqs]), one.predicted_budget)
+
+
 # ---------------------------------------------------------------- cache ----
 def test_cache_hit_returns_identical_result(world):
     ds, engine, cfg, est = world
@@ -246,6 +293,46 @@ def test_cache_keys_distinguish_filter_spec_collisions():
     twin = Request(4, q.copy(), PRED_CONTAIN,
                    label_mask=np.asarray([7], np.uint32))
     assert request_key(contain, **base) == request_key(twin, **base)
+
+
+def test_cache_keys_canonicalize_composite_filters():
+    """And(a,b) vs Or(a,b) must differ; And(a,b) vs And(b,a) must collide
+    (same canonical program → same traversal → same answer)."""
+    q = np.ones(8, np.float32)
+    base = dict(k=5, queue_size=64, alpha=1.5, probe_budget=48)
+    a, b = Contain([3]), Range(0.25, 0.75)
+
+    def key(expr):
+        return request_key(Request(0, q, expr=expr), **base)
+
+    assert key(And(a, b)) == key(And(b, a))          # commutativity collides
+    assert key(Or(a, b)) == key(Or(b, a))
+    assert key(And(a, b)) != key(Or(a, b))           # structure distinguishes
+    assert key(And(a, b)) != key(And(a, Not(b)))     # negation distinguishes
+    assert key(a) != key(And(a, b))
+    # double negation is semantic identity → canonical collision
+    assert key(Not(Not(a))) == key(a)
+    # a bare leaf and its legacy-field spelling collide (the shim contract)
+    legacy = Request(1, q, PRED_CONTAIN, label_mask=np.asarray([8], np.uint32))
+    assert request_key(legacy, **base) == key(Contain([3]))
+
+
+def test_uncompilable_filter_rejected_at_submit(world):
+    """A filter the compiler rejects must raise at submit() with nothing
+    queued — compiling after admission would poison the pump loop."""
+    ds, engine, cfg, est = world
+    sched = CostAwareScheduler(engine, est, cfg, ServeConfig(
+        lane_width=4, buckets=(128, None), cache_capacity=0))
+    pairs = [Or(Contain([2 * i]), Contain([2 * i + 1])) for i in range(6)]
+    bomb = Request(0, np.zeros(ds.dim, np.float32), expr=And(*pairs))  # 2^6 DNF
+    with pytest.raises(ValueError, match="clauses"):
+        sched.submit(bomb, 0.0)
+    assert sched.depth() == 0                        # nothing poisoned
+    ok = requests_from_workload(make_label_workload(ds, batch=3, seed=1))
+    for r in ok:
+        assert sched.submit(r, 0.0) == "queued"
+    sched.run_until_idle(0.0)                        # pump still healthy
+    assert all(r.res_idx is not None for r in ok)
 
 
 # ------------------------------------------------------------- admission ----
