@@ -1,0 +1,274 @@
+"""Quantized-index benchmark: memory, NDC throughput, matched-budget recall.
+
+Three sections, recorded in BENCH_quant.json at the repo root:
+
+  memory      traversal-resident index bytes per precision — the per-NDC
+              bandwidth term. Reported two ways: per-vector payload (codes
+              + per-node stats, the O(N) term; the ≥4× PQ acceptance) and
+              the total at this container scale including the O(1) codec
+              parameters, which don't amortize at N = 10^4 but vanish at
+              the ROADMAP's production N.
+  throughput  NDC/s of the per-step distance stage (gather + distance
+              evaluation over [B, R] blocks, jitted, warmup + best-of-N):
+              the compressed gather moves S or d bytes per candidate
+              instead of 4·d, and the ADC arithmetic replaces the d-wide
+              float contraction. Measured at the stage level because on
+              this container the full lockstep loop is dominated by fixed
+              per-step costs (merge networks, dispatch) and multi-minute
+              machine-speed drift — the stage is where precision changes
+              the work. Full-traversal wall times are recorded alongside as
+              context, not as the claim.
+  recall      end-to-end recall@10 at *matched adaptive-termination
+              budgets*: the float32 engine runs the real probe → estimate →
+              resume pipeline; the quantized engines then traverse with the
+              exact same per-query predicted budgets and finish with the
+              exact float32 rerank. Acceptance: |recall_q − recall_f32|
+              ≤ 0.01. Pre-rerank recall is recorded too — the gap is the
+              rerank stage's contribution.
+
+Known limits (recorded, not hidden): on this CPU container the int8 path
+delivers ~2× stage throughput (integer dot + 4× less gather traffic), but
+the multi-level PQ codec's S·L = 48 table lookups lower to XLA:CPU
+gathers, which execute scalar-slow — its stage throughput lands *below*
+float32 here. PQ's win on CPU is memory (4.6× per vector), not speed; the
+VMEM-resident LUT + one-hot MXU contraction form the kernel implements is
+the TPU story, where the lookup sum rides the systolic array instead of a
+scalar gather unit. The end-to-end wall numbers at this scale are
+merge-/dispatch-bound and move little with precision either way.
+
+    PYTHONPATH=src python -m benchmarks.quant_bench [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+PRECISIONS = ("float32", "int8", "pq")
+
+
+def _best_of(fn, repeats):
+    import jax
+
+    jax.block_until_ready(fn())  # warmup: compile + first run
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def stage_throughput(ds, engines, b, r, repeats, seed=0):
+    """NDC/s of the distance stage: index gather + (ADC | float32) eval."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.distance import sqdist_bdrd
+    from repro.quant.codecs import QuantGather, quant_dist
+
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(ds.vectors[rng.integers(0, ds.n, b)])
+    nb = jnp.asarray(rng.integers(0, ds.n, (b, r)).astype(np.int32))
+    base = engines["float32"].base_vectors
+
+    from repro.quant import prepare_query
+
+    # every fn takes (q|prep, nb) as *arguments*: a zero-arg jit would
+    # constant-fold the whole stage at trace time and time a buffer copy
+    f_f32 = jax.jit(lambda qq, ii: sqdist_bdrd(qq, base[ii]))
+    out = {}
+    for prec in PRECISIONS:
+        if prec == "float32":
+            fn = lambda: f_f32(q, nb)                          # noqa: E731
+        else:
+            idx = engines[prec].quant
+            prep = prepare_query(prec, idx, q)
+            if prec == "int8":
+                f = jax.jit(lambda pp, ii, idx=idx: quant_dist(
+                    "int8", QuantGather(pp, idx.codes[ii], idx.norms[ii])))
+            else:
+                f = jax.jit(lambda pp, ii, idx=idx: quant_dist(
+                    "pq", QuantGather(pp, idx.codes[ii].astype(jnp.int32),
+                                      idx.norms[ii])))
+            fn = lambda f=f, prep=prep: f(prep, nb)            # noqa: E731
+        sec = _best_of(fn, repeats)
+        out[prec] = dict(ndc_per_sec=b * r / sec,
+                         us_per_block=sec * 1e6, block=[b, r])
+    for prec in ("int8", "pq"):
+        out[prec]["gain_vs_float32"] = (out[prec]["ndc_per_sec"]
+                                        / out["float32"]["ndc_per_sec"])
+    return out
+
+
+def traversal_wall(engines, cfg, queries, filt, budget, repeats):
+    """Secondary context metric: full lockstep wall per precision."""
+    import dataclasses
+
+    import jax
+
+    out = {}
+    for prec, eng in engines.items():
+        c = dataclasses.replace(cfg)
+
+        def fn(eng=eng, c=c):
+            st = eng.search(c, queries, filt, budget)
+            jax.block_until_ready(st.res_idx)
+            return st.res_idx
+
+        sec = _best_of(fn, repeats)
+        out[prec] = dict(wall_s=sec,
+                         us_per_query=sec / queries.shape[0] * 1e6)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--corpus", type=int, default=16000)
+    ap.add_argument("--dim", type=int, default=64)
+    ap.add_argument("--train-queries", type=int, default=256)
+    ap.add_argument("--eval-queries", type=int, default=96)
+    ap.add_argument("--queue-size", type=int, default=256)
+    ap.add_argument("--k", type=int, default=10)
+    ap.add_argument("--probe", type=int, default=64)
+    ap.add_argument("--alpha", type=float, default=1.5)
+    ap.add_argument("--repeats", type=int, default=20)
+    ap.add_argument("--quick", action="store_true",
+                    help="small world for the ci.sh smoke run")
+    args = ap.parse_args()
+    if args.quick:
+        args.corpus, args.train_queries = 3000, 96
+        args.eval_queries, args.queue_size, args.repeats = 32, 128, 5
+
+    from repro.core import (CostEstimator, SearchConfig, SearchEngine,
+                            e2e_search, generate_training_data)
+    from repro.data import make_dataset, make_label_workload
+    from repro.index import build_graph_index, filtered_knn_exact
+    from repro.index.bruteforce import recall_at_k
+    from repro.quant import index_nbytes
+
+    backend = os.environ.get("REPRO_BACKEND", "pallas")
+    print(f"# bring-up: corpus={args.corpus} dim={args.dim} backend={backend}")
+    ds = make_dataset(n=args.corpus, dim=args.dim, n_clusters=24,
+                      alphabet_size=48, seed=0)
+    t0 = time.time()
+    graph = build_graph_index(ds.vectors, degree=32, seed=0)
+    print(f"#   graph in {time.time()-t0:.0f}s")
+    engines = {p: SearchEngine.build(ds, graph, backend=backend, precision=p)
+               for p in PRECISIONS}
+    cfg = SearchConfig(k=args.k, queue_size=args.queue_size)
+
+    # ---- 1. memory -------------------------------------------------------
+    # Two readings, both recorded: the per-vector payload (codes + per-node
+    # stats — the O(N) term that scales to the ROADMAP's 10^6+ corpora) and
+    # the total at this container scale including the O(1) codec parameters
+    # (codebooks/scales), which don't amortize at N = 10^4 but vanish at
+    # production N. The ≥4x acceptance is the per-vector payload.
+    import jax as _jax
+
+    f32_bytes = int(np.asarray(engines["float32"].base_vectors).nbytes)
+    memory = dict(float32=dict(bytes_total=f32_bytes,
+                               bytes_per_vector=f32_bytes / ds.n))
+    for prec in ("int8", "pq"):
+        leaves = _jax.tree.leaves(engines[prec].quant)
+        per_vec = sum(np.asarray(a).nbytes for a in leaves
+                      if np.asarray(a).ndim and np.asarray(a).shape[0] == ds.n)
+        total = index_nbytes(engines[prec].quant)
+        memory[prec] = dict(
+            bytes_total=int(total),
+            bytes_per_vector=per_vec / ds.n,
+            codec_param_bytes=int(total - per_vec),
+            reduction_per_vector=f32_bytes / per_vec,
+            reduction_total=f32_bytes / total)
+        print(f"memory {prec}: {per_vec/ds.n:.0f} B/vec vs float32 "
+              f"{f32_bytes/ds.n:.0f} B/vec → "
+              f"{f32_bytes/per_vec:.2f}x per-vector "
+              f"({f32_bytes/total:.2f}x total at N={ds.n} incl. "
+              f"{(total-per_vec)/1e3:.0f} KB codec params)")
+
+    # ---- 2. NDC throughput ----------------------------------------------
+    thr = stage_throughput(ds, engines, b=512, r=64, repeats=args.repeats)
+    for prec in PRECISIONS:
+        g = thr[prec].get("gain_vs_float32", 1.0)
+        print(f"throughput {prec}: {thr[prec]['ndc_per_sec']/1e6:.1f} M NDC/s"
+              f" ({g:.2f}x)")
+
+    wl_thr = make_label_workload(ds, batch=64, kind="contain", seed=55)
+    wall = traversal_wall(engines, cfg, wl_thr.queries, wl_thr.spec,
+                          budget=2000, repeats=3)
+
+    # ---- 3. matched-budget recall ---------------------------------------
+    print("# W_q ground truth + estimator (float32 engine)")
+    t0 = time.time()
+    wl_tr = make_label_workload(ds, batch=args.train_queries, kind="contain",
+                                seed=10)
+    td = generate_training_data(engines["float32"], ds, wl_tr, cfg,
+                                probe_budget=args.probe, chunk=96)
+    est = CostEstimator.fit(td.features, td.w_q, n_trees=150, depth=5)
+    print(f"#   {time.time()-t0:.0f}s, converged={td.converged.mean():.2f}")
+
+    wl = make_label_workload(ds, batch=args.eval_queries, kind="contain",
+                             seed=99)
+    gt_idx, _ = filtered_knn_exact(wl.queries, ds.vectors, wl.spec,
+                                   ds.labels_packed, ds.values, args.k)
+    r32 = e2e_search(engines["float32"], est, cfg, wl.queries, wl.spec,
+                     probe_budget=args.probe, alpha=args.alpha)
+    budgets = r32.predicted_budget            # the matched per-query budgets
+    rec32 = float(recall_at_k(np.asarray(r32.state.res_idx), gt_idx).mean())
+    recall = dict(float32=dict(recall=rec32,
+                               mean_ndc=float(np.asarray(r32.state.cnt).mean())))
+    print(f"recall float32: {rec32:.4f} "
+          f"(mean NDC {recall['float32']['mean_ndc']:.0f})")
+    for prec in ("int8", "pq"):
+        eng = engines[prec]
+        st = eng.search(cfg, wl.queries, wl.spec, budgets)
+        pre = float(recall_at_k(np.asarray(st.res_idx), gt_idx).mean())
+        st = eng.rerank(cfg, wl.queries, st)
+        post = float(recall_at_k(np.asarray(st.res_idx), gt_idx).mean())
+        recall[prec] = dict(
+            recall=post, recall_pre_rerank=pre,
+            mean_ndc=float(np.asarray(st.cnt).mean()),
+            rerank_pool_ndc=int(cfg.queue_size + cfg.k),
+            delta_vs_float32=post - rec32)
+        print(f"recall {prec}: {post:.4f} (pre-rerank {pre:.4f}, "
+              f"Δ vs float32 {post-rec32:+.4f})")
+
+    out = dict(
+        protocol=dict(corpus=args.corpus, dim=args.dim,
+                      train_queries=args.train_queries,
+                      eval_queries=args.eval_queries,
+                      queue_size=args.queue_size, k=args.k,
+                      probe_budget=args.probe, alpha=args.alpha,
+                      backend=backend, quick=bool(args.quick),
+                      matched_budgets="quantized engines traverse with the "
+                                      "float32 pipeline's per-query "
+                                      "predicted budgets, then exact-rerank",
+                      timing=f"warmup + best-of-{args.repeats} (stage), "
+                             "best-of-3 (traversal)"),
+        memory=memory,
+        ndc_throughput=thr,
+        traversal_wall=wall,
+        recall=recall,
+        acceptance=dict(
+            pq_memory_reduction_ge_4x=(
+                memory["pq"]["reduction_per_vector"] >= 4.0),
+            ndc_throughput_gain=max(thr["int8"]["gain_vs_float32"],
+                                    thr["pq"]["gain_vs_float32"]) > 1.0,
+            recall_within_0p01=all(
+                abs(recall[p]["delta_vs_float32"]) <= 0.01
+                for p in ("int8", "pq")),
+        ),
+    )
+    print("# acceptance:", out["acceptance"])
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_quant.json")
+    if not args.quick:  # the smoke run must not clobber the real artifact
+        with open(path, "w") as f:
+            json.dump(out, f, indent=2)
+        print(f"# wrote {os.path.normpath(path)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -19,6 +19,7 @@ CHUNKS=(
   "tests/test_kernels.py tests/test_property.py"
   "tests/test_filters.py"
   "tests/test_backends.py"
+  "tests/test_quant.py"
   "tests/test_system.py"
   "tests/test_serve.py"
   "tests/test_distributed.py"
@@ -45,6 +46,12 @@ python -m repro.launch.serve --requests 8 --batch 4 \
 # --quick keeps it small and does not overwrite BENCH_filter_algebra.json.
 echo "=== filter-algebra smoke ==="
 python -m benchmarks.filter_algebra --quick || fail=1
+
+# Quantized-index smoke: int8/PQ codecs end to end (memory, distance-stage
+# throughput, matched-budget recall + exact rerank). --quick shrinks the
+# world and does not overwrite BENCH_quant.json.
+echo "=== quant smoke ==="
+python -m benchmarks.quant_bench --quick || fail=1
 
 if [ "$fail" -ne 0 ]; then
   echo "CI: FAILURES (see chunks above)"

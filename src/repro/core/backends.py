@@ -14,6 +14,11 @@ Registered backends:
            with bitonic top-M/top-K networks — no argsort, one VMEM pass
            (see repro.kernels.fused_step).
 
+Both backends evaluate compressed-domain distances when the step hands them
+a `QuantGather` (cfg.precision "int8" | "pq", see repro.quant): dense and
+the pallas host path share `quant.codecs.quant_dist`, and the TPU kernel
+runs the matching in-kernel ADC variant.
+
 New backends register with `@register_backend("name")` and become selectable
 via `SearchConfig(backend="name")` / `SearchEngine.build(..., backend="name")`.
 """
@@ -34,12 +39,17 @@ class TraversalBackend(Protocol):
 
     def merge_step(self, cfg: SearchConfig, queries, xv, nb, is_new, prog,
                    labels_g, values_g,
-                   cand_dist, cand_idx, cand_exp, cand_valid, res_dist, res_idx):
+                   cand_dist, cand_idx, cand_exp, cand_valid, res_dist,
+                   res_idx, quant=None):
         """Evaluate the predicate program and neighbor distances, then merge
         into the sorted buffers.
 
         queries   [B, d]    query vectors
-        xv        [B, R', d] gathered neighbor vectors
+        xv        [B, R', d] gathered neighbor vectors (None in compressed
+                            mode — distances come from `quant` instead)
+        quant     QuantGather | None — prepared per-query ADC state plus the
+                            step's gathered codes/norms (repro.quant); set
+                            iff cfg.precision is "int8" or "pq"
         nb        [B, R']   neighbor ids (-1 padded)
         is_new    [B, R']   first-visit mask (visited-bitset test upstream)
         prog      FilterProgram — compiled predicate clauses ([B, S, ...])
@@ -132,14 +142,19 @@ class DenseBackend:
 
     def merge_step(self, cfg, queries, xv, nb, is_new, prog, labels_g,
                    values_g, cand_dist, cand_idx, cand_exp, cand_valid,
-                   res_dist, res_idx):
+                   res_dist, res_idx, quant=None):
         m, k = cfg.queue_size, cfg.k
         pvalid, clause_sat = eval_program_gathered(prog, labels_g, values_g)
         valid = pvalid & is_new
         clause_add = clause_counts(clause_sat, is_new)
         dist_mask = valid if cfg.mode == "pre" else is_new
 
-        dd = _sqdist(queries, xv, cfg.use_pallas)
+        if quant is None:
+            dd = _sqdist(queries, xv, cfg.use_pallas)
+        else:
+            from repro.quant.codecs import quant_dist
+
+            dd = quant_dist(cfg.precision, quant)
         dd = jnp.where(dist_mask, dd, INF)
 
         cand_dist, cand_idx, cand_exp, cand_valid = _merge_queue(
@@ -174,7 +189,7 @@ class PallasBackend:
 
     def merge_step(self, cfg, queries, xv, nb, is_new, prog, labels_g,
                    values_g, cand_dist, cand_idx, cand_exp, cand_valid,
-                   res_dist, res_idx):
+                   res_dist, res_idx, quant=None):
         from repro.kernels import ops as kops
 
         cand_pay = kops.pack_payload(cand_idx, cand_exp, cand_valid)
@@ -182,6 +197,7 @@ class PallasBackend:
          clause_add) = kops.fused_traversal_step(
             queries, xv, nb, is_new, prog, labels_g, values_g,
             cand_dist, cand_pay, res_dist, res_idx, pre=cfg.mode == "pre",
+            quant=quant, precision=cfg.precision or "float32",
         )
         cand_idx, cand_exp, cand_valid = kops.unpack_payload(cand_pay)
         return (cand_dist, cand_idx, cand_exp, cand_valid, res_dist, res_idx,

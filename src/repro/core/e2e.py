@@ -7,6 +7,12 @@ The three stages of the framework (paper Fig. 4):
                      obtain Ŵ_q = α·exp(M(z_q)).
   3. Adaptive Term — resume the identical loop carry with budget Ŵ_q.
 
+On a quantized engine (precision "int8" / "pq") a fourth, terminal stage
+runs: the exact float32 rerank of the final candidate pool (repro.quant),
+which re-scores ≤ (M+K) retained vectors per query so recall survives the
+compressed-domain traversal. The rerank replaces only the result buffers;
+`state.cnt` keeps counting compressed-domain NDCs.
+
 Also provides the DARTH-style iterative variant (`repredict_every` > 0):
 re-extract features and re-predict every Δ NDCs, stopping when the
 prediction no longer exceeds the spent budget.
@@ -137,6 +143,9 @@ def e2e_search(
             if ablate_filter:
                 f2 = ablate_filter_features(f2)
             budgets = estimator.predict_budget_jax(packed, f2, alpha, min_budget, max_budget)
+
+    # --- stage 4 (quantized engines): terminal exact float32 rerank ---
+    state = engine.rerank(cfg, queries, state)
 
     return E2EResult(
         state=state,

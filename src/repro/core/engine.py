@@ -71,20 +71,35 @@ class SearchEngine:
     entry_point: int
     backend: str | None = None  # None → whatever SearchConfig carries
     mesh: Mesh | None = None    # None → single-device execution
+    precision: str = "float32"  # deployment default ("float32"|"int8"|"pq");
+                                # a per-call SearchConfig(precision=...) wins
+    quant: object | None = None  # Int8Index | PQIndex (repro.quant) — the
+                                # compressed vector store the traversal
+                                # gathers from when precision != float32
 
     @classmethod
     def build(cls, ds: AttributedDataset, graph: GraphIndex,
               backend: str | None = None, mesh: Mesh | str | None = "auto",
+              precision: str = "float32", quant_cfg: dict | None = None,
               ) -> "SearchEngine":
         """Construct a device-resident engine.
 
-        backend  registered TraversalBackend name ("dense" | "pallas"),
-                 used whenever the per-call SearchConfig doesn't set one;
-                 an explicit SearchConfig(backend=...) always wins.
-        mesh     "auto" builds a 1-D batch mesh when >1 device is visible;
-                 pass an explicit Mesh (first axis = batch) or None to
-                 force single-device placement.
+        backend    registered TraversalBackend name ("dense" | "pallas"),
+                   used whenever the per-call SearchConfig doesn't set one;
+                   an explicit SearchConfig(backend=...) always wins.
+        mesh       "auto" builds a 1-D batch mesh when >1 device is visible;
+                   pass an explicit Mesh (first axis = batch) or None to
+                   force single-device placement.
+        precision  "float32" (default, bit-identical to the pre-quant
+                   engine), or "int8" / "pq" — trains the codec on a sample
+                   of the dataset, encodes the full store, and evaluates
+                   traversal distances in the compressed domain (exact
+                   float32 rerank available via `rerank`).
+        quant_cfg  codec knobs forwarded to quant.build_quant_index
+                   (pq_subspaces, pq_centroids, pq_iters, pq_levels, seed)
+                   plus "train_sample_size" for the codec-fitting sample.
         """
+        graph.validate()
         if mesh == "auto":
             mesh = make_search_mesh()
         eng = cls(
@@ -95,13 +110,24 @@ class SearchEngine:
             entry_point=graph.entry_point,
             backend=backend,
             mesh=mesh,
+            precision=precision,
         )
+        if precision != "float32":
+            from repro.quant import build_quant_index
+
+            qcfg = dict(quant_cfg or {})
+            sample_n = qcfg.pop("train_sample_size", 16384)
+            sample = ds.sample_vectors(sample_n, seed=qcfg.get("seed", 0))
+            eng.quant = build_quant_index(precision, ds.vectors,
+                                          train_sample=sample, **qcfg)
         if mesh is not None:
             rep = NamedSharding(mesh, P())
             eng.base_vectors = jax.device_put(eng.base_vectors, rep)
             eng.label_attrs = jax.device_put(eng.label_attrs, rep)
             eng.value_attrs = jax.device_put(eng.value_attrs, rep)
             eng.neighbors = jax.device_put(eng.neighbors, rep)
+            if eng.quant is not None:
+                eng.quant = jax.device_put(eng.quant, rep)
         return eng
 
     @property
@@ -124,6 +150,50 @@ class SearchEngine:
         prog = as_program(filt, self.n_words, self.n_values)
         return FilterProgram(*(jnp.asarray(a) for a in prog))
 
+    # ------------------------------------------------------------- quant ----
+    def effective_precision(self, cfg: SearchConfig) -> str:
+        """The precision a call with `cfg` runs at (per-call override wins)."""
+        return cfg.precision or self.precision
+
+    def codec_key(self, cfg: SearchConfig | None = None) -> str:
+        """Codec identity for result caching ("float32" | "int8:…" | "pq:…").
+
+        Precision changes answers (compressed-domain traversal order), so
+        the serving cache folds this into every request key. Pass the
+        call's `cfg` so a per-call precision override (e.g. a quantized
+        engine served at float32) keys under the precision the searches
+        actually run at, not the engine default.
+        """
+        from repro.quant import codec_key
+
+        prec = self.precision if cfg is None else self.effective_precision(cfg)
+        return codec_key(prec, self.quant)
+
+    def rerank_arrays(self, queries, state: SearchState):
+        """Exact float32 re-scoring of a finished traversal's candidate pool.
+
+        Returns (res_dist [B, K], res_idx [B, K]) — the compressed-domain
+        pool (result set ∪ valid candidate queue) re-ranked against the
+        retained full-precision vectors. Constant ≤ (M+K) float32 distance
+        computations per query, not counted into `state.cnt`.
+        """
+        from repro.quant import exact_rerank
+
+        return exact_rerank(jnp.asarray(queries, jnp.float32),
+                            self.base_vectors, state.cand_idx,
+                            state.cand_valid, state.res_idx,
+                            int(state.res_idx.shape[1]))
+
+    def rerank(self, cfg: SearchConfig, queries, state: SearchState,
+               ) -> SearchState:
+        """Terminal exact-rerank: replace the result buffers with float32
+        re-scored top-k. No-op at float32 precision. The returned state
+        must not be resumed (results are exact, queue stays compressed)."""
+        if self.effective_precision(cfg) == "float32":
+            return state
+        rd, ri = self.rerank_arrays(queries, state)
+        return state._replace(res_dist=rd, res_idx=ri)
+
     def search(
         self,
         cfg: SearchConfig,
@@ -138,6 +208,14 @@ class SearchEngine:
             # engine default applies only when the call doesn't pick one:
             # an explicit SearchConfig(backend=...) always wins.
             cfg = dataclasses.replace(cfg, backend=self.backend or "dense")
+        # same inheritance rule for precision: per-call override wins,
+        # None inherits the engine's deployment default
+        cfg = dataclasses.replace(cfg, precision=self.effective_precision(cfg))
+        if cfg.precision != "float32" and self.quant is None:
+            raise ValueError(
+                f"SearchConfig(precision={cfg.precision!r}) on an engine "
+                "without a quant index — build with precision=...")
+        quant = self.quant if cfg.precision != "float32" else None
         prog = self.compile(filt)
         attrs = self._attrs()
         q = jnp.asarray(queries, jnp.float32)
@@ -148,11 +226,14 @@ class SearchEngine:
             return run_search(
                 cfg, q, prog, self.base_vectors, attrs, self.neighbors,
                 budgets, self.entry_point, state=state, gt_dist=gt,
+                quant=quant,
             )
-        return self._search_sharded(cfg, q, prog, attrs, budgets, state, gt)
+        return self._search_sharded(cfg, q, prog, attrs, budgets, state, gt,
+                                    quant)
 
     # ---------------------------------------------------------- sharded ----
-    def _search_sharded(self, cfg, q, prog, attrs, budgets, state, gt):
+    def _search_sharded(self, cfg, q, prog, attrs, budgets, state, gt,
+                        quant=None):
         from jax.experimental.shard_map import shard_map
 
         mesh = self.mesh
@@ -179,12 +260,16 @@ class SearchEngine:
         args = [q, prog, self.base_vectors, attrs, self.neighbors, budgets]
         specs = [bspec, bspec, rep, rep, rep, bspec]
         has_state, has_gt = state is not None, gt is not None
+        has_quant = quant is not None
         if has_state:
             args.append(state)
             specs.append(bspec)
         if has_gt:
             args.append(gt)
             specs.append(bspec)
+        if has_quant:
+            args.append(quant)      # index data: replicated like the vectors
+            specs.append(rep)
 
         entry = self.entry_point
 
@@ -192,8 +277,9 @@ class SearchEngine:
             qq, qa, base, at, nb, bud = a[:6]
             st = a[6] if has_state else None
             g = a[6 + has_state] if has_gt else None
+            qt = a[6 + has_state + has_gt] if has_quant else None
             return run_search(cfg, qq, qa, base, at, nb, bud, entry,
-                              state=st, gt_dist=g)
+                              state=st, gt_dist=g, quant=qt)
 
         out = shard_map(
             fn, mesh=mesh, in_specs=tuple(specs), out_specs=bspec,

@@ -51,6 +51,14 @@ FEATURE_NAMES: tuple[str, ...] = (
     # --- progression (ours*) ---
     "log_res_full_cnt",   # NDC at which the k-th valid appeared (sentinel: 2·cnt)
     "gap_queue_nn",       # (d_queue_tail - d_nn_last)/d_start — frontier vs results
+    # --- compressed-distance bias (ours*, quantized index; 0 at float32) ---
+    # mean per-inspected-node reconstruction error ‖x − x̂‖², accumulated
+    # during the probe. A lane whose compressed distances are noisy relative
+    # to its own distance scale (quant_err_mean) or to its current frontier
+    # (quant_err_head) needs more budget for the same recall — without
+    # these the GBDT trained under quantization mixes two cost regimes.
+    "quant_err_mean",     # Σ err / n_inspected, d_start-normalized
+    "quant_err_head",     # Σ err / n_inspected, queue-head-normalized
     # --- per-clause probe selectivities (ours*, filter algebra) ---
     # rho of each compiled clause slot among inspected nodes: a conjunction
     # whose clauses have very different local selectivities costs very
@@ -71,8 +79,14 @@ assert FEATURE_NAMES[-CLAUSE_FEATURE_SLOTS:] == tuple(
 # Feature indices that constitute the paper's novel Filter group — the
 # no-filter-features ablation (paper Figs. 5/6 "w/o filter") zeroes these.
 # (includes the progression features, which are also filter-derived: they
-# measure how fast *valid* results accumulate, and the per-clause rhos)
-FILTER_FEATURE_IDX = (3, 4, 5, 26, 27, 28, 29, 30, 31)
+# measure how fast *valid* results accumulate, and the per-clause rhos;
+# the quant_err_* pair is quantization-derived, not filter-derived, and
+# stays out of the ablation)
+FILTER_FEATURE_IDX = tuple(
+    FEATURE_NAMES.index(n)
+    for n in ("rho_pilot", "rho_queue", "rho_pop", "log_res_full_cnt",
+              "gap_queue_nn", "rho_clause_0", "rho_clause_1", "rho_clause_2",
+              "rho_clause_3"))
 
 
 def _stats_sorted(dist: jax.Array, d_start: jax.Array):
@@ -123,6 +137,7 @@ def extract_features(state: SearchState) -> jax.Array:
     rho_pilot = state.n_valid_visited / jnp.maximum(state.n_inspected, 1)
     rho_pop = state.n_pop_valid / jnp.maximum(state.hops, 1)
     rho_clause = state.n_clause_valid / jnp.maximum(state.n_inspected, 1)[:, None]
+    err_mean = state.q_err_sum / jnp.maximum(state.n_inspected, 1)
 
     feats = jnp.stack(
         [
@@ -157,6 +172,8 @@ def extract_features(state: SearchState) -> jax.Array:
                 .astype(jnp.float32)
             ),
             (qt - rt) / ds,
+            err_mean / ds,
+            err_mean / jnp.maximum(qh, 1e-12),
         ]
         + [rho_clause[:, c].astype(jnp.float32)
            for c in range(rho_clause.shape[1])],

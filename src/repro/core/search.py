@@ -60,6 +60,7 @@ def run_search(
     entry_point: int,
     state: SearchState | None = None,
     gt_dist: jax.Array | None = None,
+    quant=None,                    # Int8Index | PQIndex for compressed mode
 ) -> SearchState:
     """Run (or resume) the lockstep search until all lanes terminate.
 
@@ -71,16 +72,32 @@ def run_search(
     exactly where the previous phase stopped — the paper's zero-overhead
     probe reuse. The traversal backend is resolved statically from
     `cfg.backend`, so dense and Pallas hot paths share this loop verbatim.
+
+    When `cfg.precision` is "int8" or "pq", `quant` must carry the matching
+    compressed index (repro.quant); the per-query ADC state is prepared
+    once here and every step evaluates distances in the compressed domain.
+    Probe/resume semantics are unchanged — the compressed traversal is
+    bit-resumable within its precision mode.
     """
     backend = get_backend(cfg.backend or "dense")
+    precision = cfg.precision or "float32"
+    qprep = None
+    if precision != "float32":
+        if quant is None:
+            raise ValueError(
+                f"cfg.precision={precision!r} needs a quant index — build "
+                "the engine with precision=... or pass quant= explicitly")
+        from repro.quant.codecs import prepare_query
+
+        qprep = prepare_query(precision, quant, queries)
     if state is None:
         state = init_state(cfg, queries, prog, base_vectors, attrs, entry_point,
-                           gt_dist)
+                           gt_dist, quant=quant, qprep=qprep)
     else:
         state = prepare_resume(state)
 
     step = make_step(cfg, backend, queries, prog, base_vectors, attrs,
-                     neighbors, budgets, gt_dist)
+                     neighbors, budgets, gt_dist, quant=quant, qprep=qprep)
 
     def cond(carry):
         state, it = carry

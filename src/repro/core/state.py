@@ -47,6 +47,11 @@ class SearchConfig:
     backend: str | None = None # TraversalBackend name; None → inherit the
                                # engine default (or "dense" standalone)
     use_pallas: bool = False   # dense backend: route distances through Pallas
+    precision: str | None = None  # "float32" | "int8" | "pq"; None → inherit
+                               # the engine's precision ("float32" standalone).
+                               # Non-float32 evaluates traversal distances in
+                               # the compressed domain (repro.quant) and
+                               # requires the engine/run_search quant index.
 
 
 class SearchState(NamedTuple):
@@ -64,6 +69,9 @@ class SearchState(NamedTuple):
                                # inspected (C = CLAUSE_FEATURE_SLOTS, fixed
                                # regardless of the program's slot count)
     n_pop_valid: jax.Array     # [B] i32 — valid among popped/expanded
+    q_err_sum: jax.Array       # [B] f32 — Σ reconstruction error ‖x − x̂‖²
+                               # over inspected nodes (0 in float32 mode);
+                               # feeds the quant_err_* bias features
     hops: jax.Array            # [B] i32 — expansions (search hops)
     active: jax.Array          # [B] bool
     d_start: jax.Array         # [B] f32 — entry-point distance (feature)
@@ -79,6 +87,8 @@ def init_state(
     attrs,                   # (labels [N, W] u32, values [N, V] f32)
     entry_point: int,
     gt_dist: jax.Array | None = None,  # [B, K] for convergence tracking
+    quant=None,                        # Int8Index | PQIndex (compressed mode)
+    qprep=None,                        # prepared per-query ADC state
 ) -> SearchState:
     from repro.kernels.distance import sqdist_bdrd
 
@@ -90,7 +100,21 @@ def init_state(
     labels, values = attrs
 
     ep = jnp.full((b, 1), entry_point, dtype=jnp.int32)
-    d0 = sqdist_bdrd(queries, base_vectors[ep])              # [B,1]
+    if (cfg.precision or "float32") != "float32":
+        # entry distance in the compressed domain — the whole traversal
+        # (d_start feature included) lives in one consistent metric
+        from repro.quant.codecs import QuantGather, quant_dist
+
+        norms0 = quant.norms[ep]
+        codes0 = quant.codes[ep]
+        if codes0.dtype == jnp.uint8:
+            codes0 = codes0.astype(jnp.int32)
+        d0 = quant_dist(cfg.precision,
+                        QuantGather(prep=qprep, codes=codes0, norms=norms0))
+        err0 = quant.err[ep][:, 0]
+    else:
+        d0 = sqdist_bdrd(queries, base_vectors[ep])          # [B,1]
+        err0 = jnp.zeros((b,), jnp.float32)
     val0, csat0 = eval_program_gathered(prog, labels[ep], values[ep])
     cadd0 = clause_counts(csat0, jnp.ones_like(val0))
 
@@ -123,6 +147,7 @@ def init_state(
         n_valid_visited=val0[:, 0].astype(jnp.int32),
         n_clause_valid=cadd0,
         n_pop_valid=jnp.zeros((b,), jnp.int32),
+        q_err_sum=err0,
         hops=jnp.zeros((b,), jnp.int32),
         active=jnp.ones((b,), bool),
         d_start=d0[:, 0],

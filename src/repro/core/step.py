@@ -55,17 +55,24 @@ def gather_frontier(cfg: SearchConfig, neighbors, u_safe):
 
 
 def make_step(cfg: SearchConfig, backend, queries, prog, base_vectors, attrs,
-              neighbors, budgets, gt_dist):
+              neighbors, budgets, gt_dist, quant=None, qprep=None):
     """Build the while_loop body closed over static data and per-lane budgets.
 
     `backend` is a `TraversalBackend`: it receives the gathered neighbor
     vectors and attributes plus the compiled filter program and the current
     sorted buffers, and returns the merged buffers together with the
     per-candidate validity mask and per-clause hit counters.
+
+    In compressed mode (cfg.precision != "float32") the step gathers the
+    quant index's codes (+ norms / reconstruction errors) instead of the
+    float32 vectors — the full-precision store is never touched inside the
+    hot loop — and hands the backend a `QuantGather` carrying the prepared
+    per-query ADC state (`qprep`, built once per search call).
     """
     b = queries.shape[0]
     rows = jnp.arange(b, dtype=jnp.int32)[:, None]
     label_attrs, value_attrs = attrs
+    compressed = (cfg.precision or "float32") != "float32"
 
     def step(state: SearchState) -> SearchState:
         # ---- pop best unexpanded candidate per lane ----
@@ -105,14 +112,27 @@ def make_step(cfg: SearchConfig, backend, queries, prog, base_vectors, attrs,
         visited = state.visited.at[rows, scat_w].add(scat_b, mode="drop")
 
         # ---- backend hot path: filter program + distances + merges ----
-        xv = base_vectors[nb_safe]                            # [B, R', d]
         labels_g = label_attrs[nb_safe]                       # [B, R', W]
         values_g = value_attrs[nb_safe]                       # [B, R', V]
+        if compressed:
+            from repro.quant.codecs import QuantGather
+
+            xv = None  # bandwidth point: float vectors stay out of the loop
+            codes_g = quant.codes[nb_safe]                    # [B,R',d|S·L]
+            if codes_g.dtype == jnp.uint8:
+                codes_g = codes_g.astype(jnp.int32)
+            qg = QuantGather(prep=qprep, codes=codes_g,
+                             norms=quant.norms[nb_safe])
+            err_add = jnp.where(is_new, quant.err[nb_safe], 0.0).sum(axis=1)
+        else:
+            xv = base_vectors[nb_safe]                        # [B, R', d]
+            qg = None
+            err_add = jnp.zeros((b,), jnp.float32)
         (cand_dist, cand_idx, cand_exp2, cand_valid, res_dist, res_idx,
          valid, clause_add) = backend.merge_step(
             cfg, queries, xv, nb, is_new, prog, labels_g, values_g,
             state.cand_dist, state.cand_idx, cand_exp, state.cand_valid,
-            state.res_dist, state.res_idx,
+            state.res_dist, state.res_idx, quant=qg,
         )
 
         # ---- counters (dist mask: post = all new get NDC; pre = valid) ----
@@ -126,6 +146,7 @@ def make_step(cfg: SearchConfig, backend, queries, prog, base_vectors, attrs,
         n_clause_valid = state.n_clause_valid + jnp.where(
             act[:, None], clause_add, 0)
         n_pop_valid = state.n_pop_valid + jnp.where(act & u_valid, 1, 0)
+        q_err_sum = state.q_err_sum + jnp.where(act, err_add, 0.0)
         hops = state.hops + jnp.where(act, 1, 0)
 
         # ---- convergence tracking for W_q ground truth ----
@@ -156,6 +177,7 @@ def make_step(cfg: SearchConfig, backend, queries, prog, base_vectors, attrs,
             n_valid_visited=n_valid_visited,
             n_clause_valid=n_clause_valid,
             n_pop_valid=n_pop_valid,
+            q_err_sum=q_err_sum,
             hops=hops,
             active=act,
             d_start=state.d_start,

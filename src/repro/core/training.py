@@ -11,6 +11,17 @@ sub-graph disconnection — exactly the paper's PreFiltering pathology) never
 converge; for them W_q = the NDC at search exhaustion, i.e. the true cost
 of the maximal traversal. This matches the paper's "fixed and large enough
 budget" protocol.
+
+On a quantized engine the *convergence* target switches to the
+compressed-domain filtered top-k (quant.compressed_filtered_topk): the
+traversal's result distances are compressed, so requiring them to cover the
+exact float32 ground truth would (correctly) never succeed and every W_q
+label would collapse to the exhaustion cost — an estimator trained on that
+predicts one number. Covering the compressed-domain optimum is the
+achievable definition of "done" pre-rerank, which is what keeps the cost
+model calibrated under quantization. The exact gt_idx/gt_dist returned in
+`TrainingData` stay float32-exact (they are what recall is measured
+against, post-rerank).
 """
 from __future__ import annotations
 
@@ -45,6 +56,7 @@ def generate_training_data(
 ) -> TrainingData:
     from repro.core.e2e import probe_and_features
 
+    compressed = engine.effective_precision(cfg) != "float32"
     n = workload.batch
     feats, wq, conv, gti, gtd = [], [], [], [], []
     for s in range(0, n, chunk):
@@ -55,13 +67,25 @@ def generate_training_data(
             q, np.asarray(engine.base_vectors), filt,
             np.asarray(engine.label_attrs), np.asarray(engine.value_attrs), cfg.k,
         )
+        if compressed:
+            # convergence is judged in the metric the traversal actually
+            # searches in (see module docstring)
+            from repro.index.bruteforce import valid_mask
+            from repro.quant import compressed_filtered_topk
+
+            ok = valid_mask(filt, np.asarray(engine.label_attrs),
+                            np.asarray(engine.value_attrs))
+            conv_dist, _ = compressed_filtered_topk(
+                engine.effective_precision(cfg), engine.quant, q, ok, cfg.k)
+        else:
+            conv_dist = gt_dist
         prog = engine.compile(filt)  # once for the probe + exhaustion resume
         # probe phase (budget = f) -> trajectory features
         st, z = probe_and_features(engine, cfg, q, prog, probe_budget,
-                                   n_probes, gt_dist=gt_dist)
+                                   n_probes, gt_dist=conv_dist)
         z = np.asarray(z)
         # resume to exhaustion, tracking convergence NDC
-        st = engine.search(cfg, q, prog, BIG_BUDGET, state=st, gt_dist=gt_dist)
+        st = engine.search(cfg, q, prog, BIG_BUDGET, state=st, gt_dist=conv_dist)
         cc = np.asarray(st.conv_cnt)
         cnt = np.asarray(st.cnt)
         converged = cc > 0

@@ -78,6 +78,18 @@ class AttributedDataset:
             return self.values[:, None]
         return np.concatenate([self.values[:, None], self.values_aux], axis=1)
 
+    def sample_vectors(self, n: int, seed: int = 0) -> np.ndarray:
+        """Deterministic without-replacement vector sample.
+
+        Codec fitting (k-means codebooks, int8 min/max) doesn't need the
+        full corpus; a bounded sample keeps quantized-engine bring-up
+        independent of N. Returns the full set when n >= N.
+        """
+        if n >= self.n:
+            return self.vectors
+        idx = np.random.default_rng(seed).choice(self.n, size=n, replace=False)
+        return self.vectors[idx]
+
 
 @dataclasses.dataclass
 class QueryWorkload:

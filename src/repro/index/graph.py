@@ -30,15 +30,42 @@ class GraphIndex:
         return (self.neighbors >= 0).sum(axis=1)
 
     def validate(self) -> None:
+        """Structural invariants the traversal stack relies on.
+
+        Raises TypeError/ValueError with actionable messages (`assert`
+        would vanish under `python -O`, silently admitting a graph whose
+        out-of-range ids scribble across the visited bitset and gathers).
+        `SearchEngine.build` calls this on every engine construction.
+        """
+        if self.neighbors.ndim != 2:
+            raise ValueError(
+                f"neighbors must be [N, R], got shape {self.neighbors.shape}")
         n, r = self.neighbors.shape
-        assert self.neighbors.dtype == np.int32
-        assert self.neighbors.max() < n
-        assert self.neighbors.min() >= -1
-        # no self loops among valid entries
+        if self.neighbors.dtype != np.int32:
+            raise TypeError(
+                f"neighbors must be int32 (the gather/bitset index type), "
+                f"got {self.neighbors.dtype}; cast with .astype(np.int32) "
+                "after checking ids fit")
+        mx = int(self.neighbors.max())
+        if mx >= n:
+            raise ValueError(
+                f"neighbor id {mx} out of range for N={n} nodes — the "
+                "graph references a node that does not exist")
+        mn = int(self.neighbors.min())
+        if mn < -1:
+            raise ValueError(
+                f"neighbor id {mn} < -1 (only -1 marks an empty slot)")
         rows = np.arange(n)[:, None]
         valid = self.neighbors >= 0
-        assert not np.any((self.neighbors == rows) & valid), "self loop"
-        assert 0 <= self.entry_point < n
+        loops = np.any((self.neighbors == rows) & valid, axis=1)
+        if loops.any():
+            bad = int(np.argmax(loops))
+            raise ValueError(
+                f"self loop at node {bad} ({int(loops.sum())} total) — "
+                "prune self edges before building an engine")
+        if not 0 <= self.entry_point < n:
+            raise ValueError(
+                f"entry_point {self.entry_point} outside [0, {n})")
 
     def save(self, path: str) -> None:
         np.savez_compressed(

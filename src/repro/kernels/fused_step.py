@@ -31,6 +31,19 @@ Wired in as `SearchConfig(backend="pallas")` via repro.core.backends.
 VMEM per block ≈ bB·(R·(d+W+V) + S·W + 2·next_pow2(M+R) + 2·next_pow2(K+R))·4 B;
 for bB=8, R=64, d=1024, M=512, S=8, W=4 that's ~2.3 MB — comfortable on a
 16 MB core.
+
+Compressed-domain variants (repro.quant): two sibling kernels swap only
+the distance block (step 2) and share the program-eval + merge tail via
+`_program_and_merge` —
+
+  int8  gathered [bB, R, d] int8 codes · quantized query factor, an
+        int8×int8 → int32 MXU dot (exact integer arithmetic); the float32
+        vector block never enters VMEM — ~4× less per-NDC bandwidth.
+  pq    per-query inner-product LUT rows [bB, S·L, Kc] f32 stay
+        VMEM-resident (≈ bB·S·L·Kc·4 B — 1.5 MB at bB=8, S·L=48, Kc=256)
+        and each code row costs S·L lookups, lowered as one-hot × LUT-row
+        contractions per slot, bit-equal to the gather; the distance
+        assembles as ‖q‖² + ‖x̂‖² − 2·Σ lookups.
 """
 from __future__ import annotations
 
@@ -92,18 +105,20 @@ def _program_valid_kernel(kinds, masks, lo, hi, vattr, neg, term, active,
     return valid, sats
 
 
-def _fused_step_kernel(q_ref, x_ref, nb_ref, new_ref, lab_ref, val_ref,
+def _program_and_merge(d, nb, is_new,
                        kinds_ref, masks_ref, lo_ref, hi_ref, vattr_ref,
-                       neg_ref, term_ref, tact_ref,
+                       neg_ref, term_ref, tact_ref, lab_ref, val_ref,
                        cd_ref, cp_ref, rd_ref, ri_ref,
                        ocd_ref, ocp_ref, ord_ref, ori_ref, ov_ref, occ_ref,
                        *, m, k, wq, wr, pre, n_clause):
-    q = q_ref[...].astype(jnp.float32)          # [bB, d]
-    x = x_ref[...].astype(jnp.float32)          # [bB, R, d]
-    is_new = new_ref[...]                       # [bB, R]
-    nb = nb_ref[...]                            # [bB, R]
+    """Shared kernel tail: filter program, masking, both bitonic merges.
 
-    # ---- 1. compiled filter program on the gathered attribute words ----
+    Every fused-step kernel variant (float32 MXU distances, int8 ADC, PQ
+    ADC) computes its [bB, R] distance block `d` and delegates the rest
+    here, so the program evaluation and merge dataflow can never diverge
+    between precision modes.
+    """
+    # ---- compiled filter program on the gathered attribute words ----
     # (kinds == -1 never matches a primitive tag; the active mask rides in
     # term_ref's sign bit — see fused_step packing below)
     term_pack = term_ref[...]
@@ -122,10 +137,35 @@ def _fused_step_kernel(q_ref, x_ref, nb_ref, new_ref, lab_ref, val_ref,
         if c < len(sats):
             counts.append((sats[c] & is_new).sum(axis=1).astype(jnp.int32))
         else:
-            counts.append(jnp.zeros(q.shape[:1], jnp.int32))
+            counts.append(jnp.zeros(nb.shape[:1], jnp.int32))
     occ_ref[...] = jnp.stack(counts, axis=1)
 
-    # ---- 2. distances (per-lane MXU contraction) ----
+    # ---- mask: non-scored neighbors never enter the buffers ----
+    dd = jnp.where(dmask, d, INF)
+    # pack_payload(nb, expanded=False, valid) inline; dmask ⇒ nb >= 0
+    new_pay = jnp.where(dmask, nb | (valid.astype(jnp.int32) << 30), -1)
+
+    # ---- candidate-queue merge (bitonic top-M) ----
+    ocd_ref[...], ocp_ref[...] = merge_topm(
+        cd_ref[...], cp_ref[...], dd, new_pay, m, wq)
+
+    # ---- result-set merge (valid only, bitonic top-K) ----
+    res_in = jnp.where(valid & dmask, dd, INF)
+    res_pay = jnp.where(valid & dmask, nb, -1)
+    ord_ref[...], ori_ref[...] = merge_topm(
+        rd_ref[...], ri_ref[...], res_in, res_pay, k, wr)
+
+
+def _fused_step_kernel(q_ref, x_ref, nb_ref, new_ref, lab_ref, val_ref,
+                       kinds_ref, masks_ref, lo_ref, hi_ref, vattr_ref,
+                       neg_ref, term_ref, tact_ref,
+                       cd_ref, cp_ref, rd_ref, ri_ref,
+                       ocd_ref, ocp_ref, ord_ref, ori_ref, ov_ref, occ_ref,
+                       *, m, k, wq, wr, pre, n_clause):
+    q = q_ref[...].astype(jnp.float32)          # [bB, d]
+    x = x_ref[...].astype(jnp.float32)          # [bB, R, d]
+
+    # ---- distances (per-lane MXU contraction) ----
     qn = jnp.sum(q * q, axis=-1)[:, None]
     xn = jnp.sum(x * x, axis=-1)
     qx = jax.lax.dot_general(
@@ -135,24 +175,91 @@ def _fused_step_kernel(q_ref, x_ref, nb_ref, new_ref, lab_ref, val_ref,
     )[:, 0, :]
     d = jnp.maximum(qn + xn - 2.0 * qx, 0.0)
 
-    # ---- 3. mask: non-scored neighbors never enter the buffers ----
-    dd = jnp.where(dmask, d, INF)
-    # pack_payload(nb, expanded=False, valid) inline; dmask ⇒ nb >= 0
-    new_pay = jnp.where(dmask, nb | (valid.astype(jnp.int32) << 30), -1)
+    _program_and_merge(
+        d, nb_ref[...], new_ref[...],
+        kinds_ref, masks_ref, lo_ref, hi_ref, vattr_ref, neg_ref, term_ref,
+        tact_ref, lab_ref, val_ref, cd_ref, cp_ref, rd_ref, ri_ref,
+        ocd_ref, ocp_ref, ord_ref, ori_ref, ov_ref, occ_ref,
+        m=m, k=k, wq=wq, wr=wr, pre=pre, n_clause=n_clause)
 
-    # ---- 4. candidate-queue merge (bitonic top-M) ----
-    ocd_ref[...], ocp_ref[...] = merge_topm(
-        cd_ref[...], cp_ref[...], dd, new_pay, m, wq)
 
-    # ---- 5. result-set merge (valid only, bitonic top-K) ----
-    res_in = jnp.where(valid & dmask, dd, INF)
-    res_pay = jnp.where(valid & dmask, nb, -1)
-    ord_ref[...], ori_ref[...] = merge_topm(
-        rd_ref[...], ri_ref[...], res_in, res_pay, k, wr)
+def _fused_step_int8_kernel(codes_ref, xn_ref, qq_ref, sq_ref, qn_ref,
+                            nb_ref, new_ref, lab_ref, val_ref,
+                            kinds_ref, masks_ref, lo_ref, hi_ref, vattr_ref,
+                            neg_ref, term_ref, tact_ref,
+                            cd_ref, cp_ref, rd_ref, ri_ref,
+                            ocd_ref, ocp_ref, ord_ref, ori_ref, ov_ref,
+                            occ_ref, *, m, k, wq, wr, pre, n_clause):
+    """int8 ADC variant: the distance block is an int8×int8 → int32 MXU dot
+    over the gathered codes — the index's float vectors never enter VMEM.
+
+    codes [bB, R, d] i8, xn [bB, R] f32 (per-node ‖scale⊙c‖²),
+    qq [bB, d] i8 (quantized query factor), sq/qn [bB, 1] f32.
+    Same arithmetic as quant.codecs.adc_int8: the integer dot is exact, so
+    kernel vs host agreement is bitwise up to the identical float tail.
+    """
+    qq = qq_ref[...]                             # [bB, d] i8
+    codes = codes_ref[...]                       # [bB, R, d] i8
+    dot = jax.lax.dot_general(
+        qq[:, None, :], codes,
+        dimension_numbers=(((2,), (2,)), ((0,), (0,))),
+        preferred_element_type=jnp.int32,
+    )[:, 0, :]                                   # [bB, R] i32
+    d = jnp.maximum(
+        qn_ref[...] + xn_ref[...] - 2.0 * sq_ref[...] * dot.astype(jnp.float32),
+        0.0)
+
+    _program_and_merge(
+        d, nb_ref[...], new_ref[...],
+        kinds_ref, masks_ref, lo_ref, hi_ref, vattr_ref, neg_ref, term_ref,
+        tact_ref, lab_ref, val_ref, cd_ref, cp_ref, rd_ref, ri_ref,
+        ocd_ref, ocp_ref, ord_ref, ori_ref, ov_ref, occ_ref,
+        m=m, k=k, wq=wq, wr=wr, pre=pre, n_clause=n_clause)
+
+
+def _fused_step_pq_kernel(codes_ref, lut_ref, xn_ref, qn_ref,
+                          nb_ref, new_ref, lab_ref, val_ref,
+                          kinds_ref, masks_ref, lo_ref, hi_ref, vattr_ref,
+                          neg_ref, term_ref, tact_ref,
+                          cd_ref, cp_ref, rd_ref, ri_ref,
+                          ocd_ref, ocp_ref, ord_ref, ori_ref, ov_ref,
+                          occ_ref, *, m, k, wq, wr, pre, n_clause):
+    """PQ ADC variant: per-query inner-product LUT rows stay resident in
+    VMEM ([bB, S·L, Kc] f32 ≈ bB·S·L·Kc·4 B — 1.5 MB at bB=8, S·L=48,
+    Kc=256) and each gathered code row costs S·L table lookups, realized
+    as one-hot × LUT-row MXU contractions per slot (statically unrolled):
+    exactly one unit weight per row, so the contraction equals the gather
+    bit-for-bit while avoiding per-element dynamic indexing in the kernel.
+    The distance assembles as ‖q‖² + ‖x̂‖² − 2·Σ lookups (xn = gathered
+    per-node ‖x̂‖², qn = per-lane ‖q‖²).
+    """
+    codes = codes_ref[...]                       # [bB, R, S·L] i32
+    lut = lut_ref[...]                           # [bB, S·L, Kc] f32
+    s = codes.shape[2]
+    kc = lut.shape[2]
+    ip = jnp.zeros(codes.shape[:2], jnp.float32)
+    for si in range(s):
+        onehot = (codes[:, :, si][:, :, None]
+                  == jnp.arange(kc, dtype=jnp.int32)[None, None, :]
+                  ).astype(jnp.float32)          # [bB, R, Kc]
+        ip = ip + jax.lax.dot_general(
+            onehot, lut[:, si, :][:, :, None],
+            dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32,
+        )[:, :, 0]
+    d = jnp.maximum(qn_ref[...] + xn_ref[...] - 2.0 * ip, 0.0)
+
+    _program_and_merge(
+        d, nb_ref[...], new_ref[...],
+        kinds_ref, masks_ref, lo_ref, hi_ref, vattr_ref, neg_ref, term_ref,
+        tact_ref, lab_ref, val_ref, cd_ref, cp_ref, rd_ref, ri_ref,
+        ocd_ref, ocp_ref, ord_ref, ori_ref, ov_ref, occ_ref,
+        m=m, k=k, wq=wq, wr=wr, pre=pre, n_clause=n_clause)
 
 
 def fused_step_host(q, x, nb, is_new, prog, labels_g, values_g,
-                    cand_dist, cand_pay, res_dist, res_idx, *, pre: bool):
+                    cand_dist, cand_pay, res_dist, res_idx, *, pre: bool,
+                    quant=None, precision: str = "float32"):
     """Host-path (non-TPU) equivalent of the fused kernel.
 
     Same dataflow — program evaluation, distances, mask, queue merge,
@@ -161,7 +268,8 @@ def fused_step_host(q, x, nb, is_new, prog, labels_g, values_g,
     parity is exact by construction) and the unrolled bitonic networks are
     replaced by the log-depth sorted-merge of kernels.topk (XLA:CPU
     compiles the full network pathologically; see the note there).
-    Distance arithmetic matches the dense backend expression exactly, so
+    Distance arithmetic matches the dense backend expression exactly —
+    compressed mode included: both call `quant.codecs.quant_dist` — so
     dense/pallas parity is bitwise on CPU up to distance ties.
     """
     m, k = cand_dist.shape[1], res_dist.shape[1]
@@ -170,7 +278,13 @@ def fused_step_host(q, x, nb, is_new, prog, labels_g, values_g,
     cadd = clause_counts(clause_sat, is_new)
     dist_mask = valid if pre else is_new
 
-    dd = jnp.where(dist_mask, sqdist_bdrd(q, x), INF)
+    if quant is None:
+        d_raw = sqdist_bdrd(q, x)
+    else:
+        from repro.quant.codecs import quant_dist
+
+        d_raw = quant_dist(precision, quant)
+    dd = jnp.where(dist_mask, d_raw, INF)
     new_pay = jnp.where(dist_mask, nb | (valid.astype(jnp.int32) << 30), -1)
 
     ns_d, ns_p = sort_kv_f32(dd, new_pay)
@@ -185,10 +299,12 @@ def fused_step_host(q, x, nb, is_new, prog, labels_g, values_g,
     return ocd, ocp, ordd, ori, valid, cadd
 
 
-@functools.partial(jax.jit, static_argnames=("pre", "block_b", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("pre", "block_b", "interpret", "precision"))
 def fused_step(q, x, nb, is_new, prog, labels_g, values_g, cand_dist,
                cand_pay, res_dist, res_idx, *, pre: bool = False,
-               block_b: int = 8, interpret: bool = False):
+               block_b: int = 8, interpret: bool = False,
+               quant=None, precision: str = "float32"):
     """One fused traversal step over a batch of lanes.
 
     q [B,d], x [B,R,d], nb [B,R] i32, is_new [B,R] bool,
@@ -198,9 +314,14 @@ def fused_step(q, x, nb, is_new, prog, labels_g, values_g, cand_dist,
     res_dist [B,K] f32 + res_idx [B,K] i32 (sorted ascending)
     -> (cand_dist, cand_pay, res_dist, res_idx, valid [B,R] bool,
         clause_add [B,C] i32) merged, sorted, best-M/K.
+
+    Compressed mode: precision "int8" | "pq" with `quant` a QuantGather
+    (per-query ADC prep + the step's gathered codes/norms); `x` may be
+    None — the distance block runs on the codes (int8 MXU dot / in-VMEM
+    LUT rows), the float vectors never enter the kernel.
     """
     b, dm = q.shape
-    r = x.shape[1]
+    r = nb.shape[1]
     m = cand_dist.shape[1]
     k = res_dist.shape[1]
     s = prog.kinds.shape[1]
@@ -227,7 +348,8 @@ def fused_step(q, x, nb, is_new, prog, labels_g, values_g, cand_dist,
         return jnp.pad(a, widths, constant_values=fill)
 
     q = pad0(q)
-    x = pad0(x)
+    if x is not None:
+        x = pad0(x)
     nb = pad0(nb, -1)
     is_new = pad0(is_new)
     labels_g = pad0(labels_g)
@@ -249,13 +371,43 @@ def fused_step(q, x, nb, is_new, prog, labels_g, values_g, cand_dist,
     def row(shape):
         return pl.BlockSpec(shape, lambda i: (i,) + (0,) * (len(shape) - 1))
 
-    kern = functools.partial(_fused_step_kernel, m=m, k=k, wq=wq, wr=wr,
+    # variant head: (kernel fn, leading inputs + specs). The shared tail
+    # (attributes, program, buffers) is identical across precisions.
+    if precision == "float32":
+        head_kern = _fused_step_kernel
+        head_in = [q.astype(jnp.float32), x]
+        head_specs = [row((bb, dm)), row((bb, r, dm))]
+    elif precision == "int8":
+        codes = pad0(quant.codes.astype(jnp.int8))
+        xn = pad0(quant.norms)
+        qq = pad0(quant.prep.qq)
+        sq = pad0(quant.prep.sq[:, None])
+        qn = pad0(quant.prep.qn[:, None])
+        dq = codes.shape[2]
+        head_kern = _fused_step_int8_kernel
+        head_in = [codes, xn, qq, sq, qn]
+        head_specs = [row((bb, r, dq)), row((bb, r)), row((bb, dq)),
+                      row((bb, 1)), row((bb, 1))]
+    elif precision == "pq":
+        codes = pad0(quant.codes.astype(jnp.int32))
+        lut = pad0(quant.prep.lut)
+        xn = pad0(quant.norms)
+        qn = pad0(quant.prep.qn[:, None])
+        sp, kc = lut.shape[1], lut.shape[2]
+        head_kern = _fused_step_pq_kernel
+        head_in = [codes, lut, xn, qn]
+        head_specs = [row((bb, r, sp)), row((bb, sp, kc)), row((bb, r)),
+                      row((bb, 1))]
+    else:
+        raise ValueError(f"unknown precision {precision!r}")
+
+    kern = functools.partial(head_kern, m=m, k=k, wq=wq, wr=wr,
                              pre=pre, n_clause=CLAUSE_FEATURE_SLOTS)
     ocd, ocp, ordd, ori, ov, occ = pl.pallas_call(
         kern,
         grid=(bp // bb,),
-        in_specs=[
-            row((bb, dm)), row((bb, r, dm)), row((bb, r)), row((bb, r)),
+        in_specs=head_specs + [
+            row((bb, r)), row((bb, r)),
             row((bb, r, w)), row((bb, r, v)),
             row((bb, s)), row((bb, s, w)), row((bb, s)), row((bb, s)),
             row((bb, s)), row((bb, s)), row((bb, s)), row((bb, t)),
@@ -274,7 +426,7 @@ def fused_step(q, x, nb, is_new, prog, labels_g, values_g, cand_dist,
             jax.ShapeDtypeStruct((bp, CLAUSE_FEATURE_SLOTS), jnp.int32),
         ],
         interpret=interpret,
-    )(q.astype(jnp.float32), x, nb, is_new, labels_g, values_g,
+    )(*head_in, nb, is_new, labels_g, values_g,
       kinds, masks, lo, hi, vattr, neg, term_pack, tact,
       cand_dist.astype(jnp.float32), cand_pay,
       res_dist.astype(jnp.float32), res_idx)

@@ -50,19 +50,25 @@ def queue_merge(dist, payload, new_dist, new_payload):
 
 def fused_traversal_step(q, x, nb, is_new, prog, labels_g, values_g,
                          cand_dist, cand_pay, res_dist, res_idx, *,
-                         pre: bool = False):
+                         pre: bool = False, quant=None,
+                         precision: str = "float32"):
     """Fused filter program + distance + queue/result merge (one step).
 
     Returns (cand_dist, cand_pay, res_dist, res_idx, valid, clause_add) —
     see kernels.fused_step. `pre` selects the ACORN distance accounting
-    (score predicate-valid first-visits only).
+    (score predicate-valid first-visits only). `quant`/`precision` select
+    the compressed-domain distance block (int8 ADC dot / PQ LUT gather);
+    the host path shares `quant.codecs.quant_dist` with the dense backend
+    so compressed-mode dense/pallas parity is exact on CPU.
     """
     if _interpret():
         return _fused.fused_step_host(q, x, nb, is_new, prog, labels_g,
                                       values_g, cand_dist, cand_pay,
-                                      res_dist, res_idx, pre=pre)
+                                      res_dist, res_idx, pre=pre,
+                                      quant=quant, precision=precision)
     return _fused.fused_step(q, x, nb, is_new, prog, labels_g, values_g,
-                             cand_dist, cand_pay, res_dist, res_idx, pre=pre)
+                             cand_dist, cand_pay, res_dist, res_idx, pre=pre,
+                             quant=quant, precision=precision)
 
 
 def estimator_predict(feats, packed_model, depth):

@@ -25,10 +25,14 @@ import numpy as np
 
 
 def build_world(corpus: int, train_queries: int, queue_size: int, k: int,
-                probe: int, backend: str | None, seed: int = 0):
+                probe: int, backend: str | None, seed: int = 0,
+                precision: str = "float32"):
     """Index + graph + engine + a single estimator trained on a *mixed*
     contain/range workload (features are predicate-agnostic, so one GBDT
-    serves both request kinds)."""
+    serves both request kinds). `precision` deploys the engine with a
+    compressed vector store (int8 / pq) — the estimator is then trained on
+    the same engine, so its cost model sees compressed-domain probes, and
+    the scheduler reranks every finished lane with exact float32."""
     import dataclasses
 
     from repro.core import (CostEstimator, SearchConfig, SearchEngine,
@@ -40,7 +44,8 @@ def build_world(corpus: int, train_queries: int, queue_size: int, k: int,
     ds = make_dataset(n=corpus, dim=48, n_clusters=16, alphabet_size=48,
                       seed=seed)
     graph = build_graph_index(ds.vectors, degree=24, seed=seed)
-    engine = SearchEngine.build(ds, graph, backend=backend)
+    engine = SearchEngine.build(ds, graph, backend=backend,
+                                precision=precision)
     cfg = SearchConfig(k=k, queue_size=queue_size, pred_kind=PRED_CONTAIN)
 
     half = train_queries // 2
@@ -100,6 +105,10 @@ def main():
                     help="decode this many tokens per request with a tiny "
                          "LM over the retrieved ids (0 = retrieval only)")
     ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--precision", default="float32",
+                    choices=["float32", "int8", "pq"],
+                    help="engine vector-store precision: compressed-domain "
+                         "traversal + exact float32 rerank on completion")
     args = ap.parse_args()
 
     from repro.serve import CostAwareScheduler, ServeConfig
@@ -107,7 +116,14 @@ def main():
     print("== index + estimator bring-up")
     ds, graph, engine, cfg, est = build_world(
         args.corpus, args.train_queries, args.queue_size, args.k, args.probe,
-        backend=os.environ.get("REPRO_BACKEND", "pallas"))
+        backend=os.environ.get("REPRO_BACKEND", "pallas"),
+        precision=args.precision)
+    if args.precision != "float32":
+        from repro.quant import store_ratio
+
+        print(f"   quantized store ({engine.codec_key()}): "
+              f"{store_ratio(engine.quant, engine.base_vectors):.1f}x "
+              "smaller than float32")
 
     buckets = tuple(int(x) for x in args.buckets.split(",") if x) + (None,)
     # the launcher submits the whole stream before pumping, so the default

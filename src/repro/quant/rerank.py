@@ -1,0 +1,61 @@
+"""Exact float32 rerank of a finished compressed-domain traversal.
+
+Compressed distances decide *which* nodes the traversal keeps; they must
+not decide the final ranking — quantization noise near the decision
+boundary is exactly where recall dies. The rerank stage re-scores the
+final candidate pool (result set ∪ predicate-valid candidate queue) with
+exact float32 squared L2 against the retained full-precision vectors and
+re-selects the top-k, so end-to-end recall degrades only when a true
+neighbor never entered the pool at all — the event the candidate queue's
+slack (M ≫ K) makes rare.
+
+Cost accounting: one rerank is ≤ (M + K) float32 distance computations per
+query, a *constant* independent of the traversal budget — it is not added
+to `cnt` (the adaptive-termination NDC signal) and benchmarks report it
+separately.
+
+The rerank is terminal: it overwrites the result buffers with exact
+distances while the candidate queue keeps compressed ones, so a reranked
+state must not be resumed (the engine's probe→resume phases rerank only
+after the last resume).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.distance import sqdist_bdrd
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def exact_rerank(queries, base_vectors, cand_idx, cand_valid, res_idx, k: int):
+    """Re-score the candidate pool with exact float32 distances.
+
+    queries [B, d], base_vectors [N, d] f32, cand_idx/cand_valid [B, M],
+    res_idx [B, K0] → (res_dist [B, k] ascending, res_idx [B, k]); rows
+    with fewer than k valid pool entries pad with dist=+inf, idx=-1.
+    """
+    b = queries.shape[0]
+    pool = jnp.concatenate(
+        [res_idx, jnp.where(cand_valid, cand_idx, -1)], axis=1)   # [B, P]
+
+    # dedup (a node can sit in both buffers): sort by id, mask repeats,
+    # scatter the mask back — same pattern as the pre-mode frontier dedup
+    order = jnp.argsort(pool, axis=1, stable=True)
+    s = jnp.take_along_axis(pool, order, axis=1)
+    dup_sorted = jnp.concatenate(
+        [jnp.zeros((b, 1), bool), s[:, 1:] == s[:, :-1]], axis=1)
+    inv = jnp.argsort(order, axis=1, stable=True)
+    dup = jnp.take_along_axis(dup_sorted, inv, axis=1)
+    pool = jnp.where(dup, -1, pool)
+
+    ok = pool >= 0
+    xv = base_vectors[jnp.maximum(pool, 0)]                       # [B, P, d]
+    dd = jnp.where(ok, sqdist_bdrd(jnp.asarray(queries, jnp.float32), xv),
+                   jnp.inf)
+    sel = jnp.argsort(dd, axis=1, stable=True)[:, :k]
+    rd = jnp.take_along_axis(dd, sel, axis=1)
+    ri = jnp.take_along_axis(pool, sel, axis=1)
+    return rd, jnp.where(jnp.isfinite(rd), ri, -1)

@@ -24,7 +24,13 @@ from repro.filters.expr import canonical_key
 def request_key(req, k: int, queue_size: int, alpha: float,
                 probe_budget: int, min_budget: int = 32,
                 max_budget: int = 1 << 30, n_probes: int = 2,
-                ablate_filter: bool = False) -> str:
+                ablate_filter: bool = False,
+                codec: str = "float32") -> str:
+    """`codec` is the engine's codec identity (`SearchEngine.codec_key()`):
+    precision tag + codec-parameter digest. Quantization changes traversal
+    order and the surviving candidate pool, hence the answer — two engines
+    differing only in precision (or in a retrained codebook) must never
+    share cache entries."""
     h = hashlib.sha1()
     h.update(np.ascontiguousarray(req.query, np.float32).tobytes())
     h.update(b"|filter:")
@@ -32,6 +38,7 @@ def request_key(req, k: int, queue_size: int, alpha: float,
     h.update(b"|k:%d|m:%d|a:%r|f:%d|lo:%d|hi:%d|np:%d|abl:%d"
              % (k, queue_size, alpha, probe_budget, min_budget, max_budget,
                 n_probes, ablate_filter))
+    h.update(b"|codec:" + codec.encode())
     return h.hexdigest()
 
 

@@ -100,6 +100,13 @@ class CostAwareScheduler:
                       if serve_cfg.cache_capacity else None)
         self.metrics = ServeMetrics()
         self._packed = estimator.packed()  # GBDT forest, packed once
+        # precision is a per-engine deployment knob: the codec identity is
+        # part of every cache key (resolved against THIS scheduler's cfg,
+        # so a per-call precision override keys under what actually runs),
+        # and quantized engines rerank finished lanes with exact float32
+        # before results leave the scheduler
+        self._codec = engine.codec_key(cfg)
+        self._rerank = engine.effective_precision(cfg) != "float32"
 
     # ------------------------------------------------------------- ingress ----
     def _key(self, req: Request) -> str:
@@ -111,7 +118,7 @@ class CostAwareScheduler:
             req.cache_key = request_key(
                 req, self.cfg.k, self.cfg.queue_size, s.alpha,
                 s.probe_budget, s.min_budget, s.max_budget, s.n_probes,
-                s.ablate_filter)
+                s.ablate_filter, codec=self._codec)
         return req.cache_key
 
     def submit(self, req: Request, now: float) -> str:
@@ -210,6 +217,25 @@ class CostAwareScheduler:
         return now
 
     # ---------------------------------------------------------- internals ----
+    def _final_results(self, queries, state, any_finish: bool = True):
+        """Result arrays lanes finish with: the raw traversal buffers at
+        float32 precision, the exact-reranked pool on a quantized engine.
+
+        The rerank runs on the whole batch (it is jitted and costs a
+        constant ≤ (M+K) float32 distances per lane — small next to any
+        bucket's traversal work), but only when some lane actually
+        finishes in this pump (`any_finish` — an escalate-policy slice
+        whose every lane requeues would discard the whole computation).
+        Lanes that continue keep their carried state untouched, so resumes
+        stay in the compressed domain and the scheduled result remains
+        bit-identical to one-shot `e2e_search`, whose terminal rerank sees
+        the same per-lane pools.
+        """
+        if self._rerank and any_finish:
+            rd, ri = self.engine.rerank_arrays(queries, state)
+            return np.asarray(ri), np.asarray(rd)
+        return np.asarray(state.res_idx), np.asarray(state.res_dist)
+
     def _pump_probe(self, now: float) -> tuple[list[Request], float]:
         scfg = self.scfg
         reqs = self.ingress.take_group(self.batcher.lane_width)
@@ -235,8 +261,9 @@ class CostAwareScheduler:
                                      scfg.ablate_filter, packed=self._packed)
         budgets = np.asarray(jax.block_until_ready(budgets))
         cnt = np.asarray(st.cnt)
-        res_idx = np.asarray(st.res_idx)
-        res_dist = np.asarray(st.res_dist)
+        res_idx, res_dist = self._final_results(
+            queries, st,
+            any(int(budgets[i]) <= int(cnt[i]) for i in range(len(reqs))))
         steps = int(np.asarray(st.hops).max())  # lockstep trip count
         busy = (self.timer() - t0 if self.service_model is None
                 else self.service_model(steps, width))
@@ -275,8 +302,9 @@ class CostAwareScheduler:
         entry_hops = np.asarray(state.hops)
         out = self.engine.search(cfg, queries, prog, budgets, state=state)
         jax.block_until_ready(out)
-        res_idx = np.asarray(out.res_idx)
-        res_dist = np.asarray(out.res_dist)
+        res_idx, res_dist = self._final_results(
+            queries, out,
+            cap is None or any(r.budget <= cap for r in reqs))
         cnt = np.asarray(out.cnt)
         targets = np.asarray(budgets)
         steps = int((np.asarray(out.hops) - entry_hops).max())

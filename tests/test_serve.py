@@ -289,6 +289,18 @@ def test_cache_keys_distinguish_filter_spec_collisions():
             != request_key(contain, **base, n_probes=1))
     assert (request_key(contain, **base)
             != request_key(contain, **base, ablate_filter=True))
+    # the engine's codec identity is answer-changing: compressed-domain
+    # traversal keeps a different candidate pool, and a retrained codebook
+    # (different digest) changes the pool again — neither may share entries
+    # with float32 or with each other
+    assert (request_key(contain, **base)
+            != request_key(contain, **base, codec="int8:aabbccddeeff"))
+    assert (request_key(contain, **base, codec="int8:aabbccddeeff")
+            != request_key(contain, **base, codec="pq:aabbccddeeff"))
+    assert (request_key(contain, **base, codec="pq:aabbccddeeff")
+            != request_key(contain, **base, codec="pq:001122334455"))
+    assert (request_key(contain, **base, codec="float32")
+            == request_key(contain, **base))          # explicit default collides
     # identical requests collide on purpose
     twin = Request(4, q.copy(), PRED_CONTAIN,
                    label_mask=np.asarray([7], np.uint32))
