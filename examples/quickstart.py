@@ -4,11 +4,19 @@ with a composite filter from the filter algebra, and (optionally) deploy
 the engine on a compressed vector store.
 
     PYTHONPATH=src python examples/quickstart.py [--precision pq]
+                                                 [--plan auto|scan|widen|traverse]
 
 --precision int8|pq builds the engine with a quantized index: the
 traversal evaluates distances in the compressed domain (int8 ADC dot / PQ
 lookup tables) and every pipeline result is exact-reranked in float32 —
 same API, ~4–13x smaller hot-loop index.
+
+--plan picks the filter-execution strategy for the final composite-filter
+step: "scan" (pre-filter: bitmap + masked exact top-k over the valid set),
+"widen" (filtered-expansion traversal, 1-hop ∪ strided 2-hop frontier),
+"traverse" (the standard E2E pipeline), or "auto" (default: the planner
+routes each lane to the cheapest plan from its exact selectivity and
+cost-head predictions).
 """
 import argparse
 import os
@@ -31,6 +39,10 @@ def main():
                     choices=["float32", "int8", "pq"],
                     help="engine vector-store precision (compressed-domain "
                          "traversal + exact float32 rerank)")
+    ap.add_argument("--plan", default="auto",
+                    choices=["auto", "scan", "widen", "traverse"],
+                    help="filter-execution strategy for the planned search "
+                         "step (auto = per-lane planner routing)")
     args = ap.parse_args()
 
     print("== 1. synthetic attributed vectors (clustered, label-correlated)")
@@ -92,6 +104,37 @@ def main():
     rec = recall_at_k(np.asarray(r.state.res_idx), gt_idx).mean()
     print(f"   E2E composite: recall={rec:.3f} "
           f"mean NDC={np.asarray(r.state.cnt).mean():.0f}")
+
+    print(f"== 6. adaptive plan routing (--plan {args.plan})")
+    # The planner picks a filter-execution strategy per lane: selective
+    # filters pre-filter scan (exact, σ·N distances), broad ones keep the
+    # graph traversal, pathological middles widen the frontier. Training
+    # labels both traversal variants from one shared probe per query.
+    from repro.core import (fit_planner, generate_plan_training_data,
+                            planned_search, run_plan)
+    from repro.data import make_composite_workload
+
+    wl_plan = make_composite_workload(ds, batch=256, structure="mixed",
+                                      seed=11)
+    ptd = generate_plan_training_data(engine, ds, wl_plan, cfg,
+                                      probe_budget=96, chunk=128)
+    planner = fit_planner(ptd, probe_budget=96, n_trees=100, depth=5)
+    if args.plan == "auto":
+        res = planned_search(engine, planner, cfg, wl.queries, exprs,
+                             probe_budget=96, alpha=1.5)
+        st = res.state
+        routed = {p: int((np.asarray(res.plan) == i).sum())
+                  for i, p in enumerate(("scan", "traverse", "widen"))}
+        print(f"   routed: {routed} "
+              f"(stage-0 scans: {int(np.asarray(res.pre_probe).sum())})")
+    else:
+        st = run_plan(engine, planner, args.plan, cfg, wl.queries, exprs,
+                      probe_budget=96, alpha=1.5)
+    rec = recall_at_k(np.asarray(st.res_idx), gt_idx).mean()
+    print(f"   plan={args.plan}: recall={rec:.3f} "
+          f"mean NDC={np.asarray(st.cnt).mean():.0f} "
+          f"(standard traversal above: "
+          f"{np.asarray(r.state.cnt).mean():.0f})")
 
 
 if __name__ == "__main__":

@@ -22,6 +22,7 @@ CHUNKS=(
   "tests/test_quant.py"
   "tests/test_system.py"
   "tests/test_serve.py"
+  "tests/test_planner.py"
   "tests/test_distributed.py"
   "tests/test_models_smoke.py tests/test_dryrun_small.py"
 )
@@ -52,6 +53,13 @@ python -m benchmarks.filter_algebra --quick || fail=1
 # world and does not overwrite BENCH_quant.json.
 echo "=== quant smoke ==="
 python -m benchmarks.quant_bench --quick || fail=1
+
+# Planner smoke: scan / widen / traverse + per-lane routing across a
+# selectivity sweep, recall vs the brute-force oracle and NDC vs the best
+# single plan. --quick shrinks the world and does not overwrite
+# BENCH_planner.json.
+echo "=== planner smoke ==="
+python -m benchmarks.planner_bench --quick || fail=1
 
 if [ "$fail" -ne 0 ]; then
   echo "CI: FAILURES (see chunks above)"

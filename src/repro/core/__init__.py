@@ -20,6 +20,18 @@ from repro.core.gbdt import GBDTModel, train_gbdt, predict_jax
 from repro.core.estimator import CostEstimator, spearman
 from repro.core.training import TrainingData, generate_training_data
 from repro.core.e2e import E2EResult, e2e_search, predict_budgets, probe_and_features
+from repro.core.plans import ScanStats, scan_search, scan_stats
+from repro.core.planner import (
+    PLANS,
+    Planner,
+    PlanResult,
+    PlanTrainingData,
+    fit_planner,
+    generate_plan_training_data,
+    planned_search,
+    run_plan,
+    static_features,
+)
 from repro.core import baselines
 
 __all__ = [
@@ -53,5 +65,17 @@ __all__ = [
     "take_lanes",
     "concat_lanes",
     "pad_lanes",
+    "ScanStats",
+    "scan_search",
+    "scan_stats",
+    "PLANS",
+    "Planner",
+    "PlanResult",
+    "PlanTrainingData",
+    "fit_planner",
+    "generate_plan_training_data",
+    "planned_search",
+    "run_plan",
+    "static_features",
     "baselines",
 ]

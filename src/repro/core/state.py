@@ -40,8 +40,15 @@ class SearchConfig:
     degree: int = 32           # graph out-degree R (static)
     pred_kind: int = PRED_CONTAIN  # legacy tag; traversal is driven entirely
                                # by the compiled FilterProgram and ignores it
-    mode: str = "post"         # "post" | "pre"
-    two_hop_stride: int = 8    # pre mode: sample every s-th 2-hop neighbor
+    mode: str = "post"         # "post" | "pre" | "widen"
+                               # widen = filtered-expansion traversal (the
+                               # planner's middle plan): the pre-mode
+                               # widened frontier (1-hop ∪ strided 2-hop)
+                               # with post-mode scoring/accounting — every
+                               # new neighbor is distance-scored and NDC'd,
+                               # but the frontier can step across invalid
+                               # regions a selective conjunction carves out
+    two_hop_stride: int = 8    # pre/widen: sample every s-th 2-hop neighbor
     max_steps: int = 100000
     greedy_stop: bool = False  # optional: stop when best cand > worst result
     backend: str | None = None # TraversalBackend name; None → inherit the

@@ -32,13 +32,18 @@ from repro.core.state import INF, SearchConfig, SearchState
 def gather_frontier(cfg: SearchConfig, neighbors, u_safe):
     """Neighbor ids to inspect for popped nodes u_safe [B].
 
-    post: the 1-hop list [B, R]. pre: 1-hop ∪ strided 2-hop with intra-step
-    dedup (2-hop lists may repeat 1-hop entries), ACORN-γ style.
+    post: the 1-hop list [B, R]. pre/widen: 1-hop ∪ strided 2-hop with
+    intra-step dedup (2-hop lists may repeat 1-hop entries), ACORN-γ style.
+    widen shares the pre frontier but keeps post accounting/scoring — the
+    planner's filtered-expansion plan: under a selective conjunction the
+    1-hop frontier of valid nodes disconnects, so the step pays distance
+    NDC for every new widened neighbor (no predicate-gated scoring) in
+    exchange for hop-2 reach.
     """
     b = u_safe.shape[0]
     r = cfg.degree
     nb = neighbors[u_safe]                                   # [B, R]
-    if cfg.mode == "pre":
+    if cfg.mode in ("pre", "widen"):
         hop2 = neighbors[jnp.maximum(nb, 0)]                 # [B, R, R]
         hop2 = hop2[:, :, :: cfg.two_hop_stride].reshape(b, -1)
         hop2 = jnp.where(jnp.repeat(nb >= 0, hop2.shape[1] // r, axis=1), hop2, -1)

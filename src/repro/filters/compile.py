@@ -291,6 +291,54 @@ def eval_program_gathered(prog: FilterProgram, labels_g, values_g):
     return jnp.any(term_ok, axis=1), clause_sat
 
 
+@jax.jit
+def _matrix_chunk(prog: FilterProgram, labels, values):
+    """One N-chunk of the full-store evaluation: (valid [B,nb], clause
+    counts [B, CLAUSE_FEATURE_SLOTS])."""
+    b = prog.kinds.shape[0]
+    nb = labels.shape[0]
+    lg = jnp.broadcast_to(labels[None], (b, nb, labels.shape[1]))
+    vg = jnp.broadcast_to(values[None], (b, nb, values.shape[1]))
+    valid, csat = eval_program_gathered(prog, lg, vg)
+    return valid, clause_counts(csat, jnp.ones_like(valid))
+
+
+def eval_program_matrix(prog: FilterProgram, labels, values,
+                        chunk: int = 2048):
+    """Evaluate a program batch against the *full* attribute store.
+
+    prog leaves [B, S, ...]; labels [N, W] u32; values [N, V] f32 →
+    (valid [B, N] bool, clause_frac [B, CLAUSE_FEATURE_SLOTS] f32).
+
+    This is the scan plan's candidate-bitmap compiler and the planner's
+    exact per-query selectivity source: `valid.sum(1)/N` is σ_q with no
+    sampling error, and `clause_frac` is the *global* analogue of the
+    probe's rho_clause_* features (clause satisfaction over the whole
+    store instead of over the probe's inspected set). Chunked over N
+    because eval_program_gathered materializes [B, S, nb, W]
+    intermediates. Boolean evaluation only — no distances, so per the
+    repo's NDC accounting (predicate evaluations are tracked separately
+    in n_inspected) compiling the bitmap costs 0 NDC, like every other
+    predicate evaluation in the traversal. Results are exact and
+    per-lane independent: lane b's row depends only on its own program
+    row, which the serving layer's batch-composition guarantees rely on.
+    """
+    labels = jnp.asarray(labels)
+    values = jnp.asarray(values)
+    if values.ndim == 1:
+        values = values[:, None]
+    n = labels.shape[0]
+    outs, counts = [], None
+    for s in range(0, n, chunk):
+        valid, cc = _matrix_chunk(prog, labels[s:s + chunk],
+                                  values[s:s + chunk])
+        outs.append(np.asarray(valid))
+        counts = cc if counts is None else counts + cc
+    valid = np.concatenate(outs, axis=1)
+    frac = np.asarray(counts, np.float32) / float(n)
+    return valid, frac
+
+
 def clause_counts(clause_sat, counted, n_slots: int = CLAUSE_FEATURE_SLOTS):
     """Per-clause hit counters over the counted (inspected-new) candidates.
 

@@ -12,16 +12,34 @@ from repro.filters.predicates import filter_matrix
 
 
 def _pairwise_sqdist(queries: np.ndarray, base: np.ndarray, block: int = 4096) -> np.ndarray:
-    """[B, N] squared L2, blocked over N to bound memory."""
+    """[B, N] squared L2, blocked over N to bound memory.
+
+    Blocks route through the scan plan's per-lane distance path
+    (`kernels.distance.scan_sqdist_lanes`, i.e. `sqdist_bdrd` at a
+    canonical [1, V, d] shape) rather than a host BLAS matmul: the
+    pre-filter scan plan must be bit-identical to this oracle on float32
+    (tests/test_planner.py pins it) and numpy BLAS disagrees with XLA:CPU
+    in the last ulp. Blocks are SCAN_ALIGN-padded with zero rows, so the
+    block decomposition cannot change a value either (64-aligned widths
+    are mutually bitwise-stable — see kernels.distance).
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.distance import SCAN_ALIGN, scan_sqdist_lanes
+
+    q = jnp.asarray(queries, jnp.float32)
     b = queries.shape[0]
     n = base.shape[0]
     out = np.empty((b, n), dtype=np.float32)
-    qn = (queries**2).sum(axis=1, keepdims=True)
     for s in range(0, n, block):
         e = min(s + block, n)
-        blk = base[s:e]
-        out[:, s:e] = qn + (blk**2).sum(axis=1)[None, :] - 2.0 * queries @ blk.T
-    np.maximum(out, 0.0, out=out)
+        v = e - s
+        pad = (-v) % SCAN_ALIGN
+        blk = np.zeros((v + pad, base.shape[1]), np.float32)
+        blk[:v] = base[s:e]
+        xg = jnp.broadcast_to(jnp.asarray(blk)[None], (b, v + pad, blk.shape[1]))
+        d = scan_sqdist_lanes(q, xg, jnp.ones((b, v + pad), bool))
+        out[:, s:e] = np.asarray(d[:, :v])
     return out
 
 

@@ -21,6 +21,16 @@ from jax.experimental import pallas as pl
 
 INF = float("inf")
 
+# Row-count alignment for the pre-filter scan plan's gathered distance
+# blocks. Empirically (pinned by tests/test_planner.py), XLA:CPU emits the
+# same reduction for the bdrd einsum at every R that is a multiple of 64,
+# so a (query, row) pair evaluates to the same bits no matter how wide the
+# gathered block around it is — which is what lets the scan plan, the
+# bruteforce oracle, and any serving-time batch shape agree bitwise. Widths
+# off the alignment (R=7, R=257, …) pick different vectorizations and drift
+# in the last ulp.
+SCAN_ALIGN = 64
+
 
 def sqdist_bdrd(q, x):
     """Pure-jnp squared L2: q [B,d], x [B,R,d] -> [B,R], clamped >= 0.
@@ -36,6 +46,31 @@ def sqdist_bdrd(q, x):
     xn = jnp.sum(x * x, axis=-1)
     qx = jnp.einsum("bd,brd->br", q, x)
     return jnp.maximum(qn + xn - 2.0 * qx, 0.0)
+
+
+@jax.jit
+def scan_sqdist_lanes(q, x, mask):
+    """Per-lane deterministic masked squared L2 for the pre-filter scan plan.
+
+    q [B,d], x [B,V,d], mask [B,V] -> [B,V] f32 (+inf where ~mask).
+
+    Each lane is evaluated at the canonical [1, V, d] shape via `lax.map`,
+    so the value of any (query, row) pair is independent of which lanes
+    share the batch — the serving layer pads scan batches to different lane
+    widths than the one-shot planner, and the scheduled == one-shot
+    bit-identity for scan-routed requests rides on this. V must be a
+    multiple of SCAN_ALIGN (64-aligned widths are mutually bitwise-stable,
+    see above), so the same pair also evaluates identically regardless of
+    how much padding the gather added. Shares `sqdist_bdrd` per lane: one
+    distance expression for traversal, scan, and oracle.
+    """
+    if x.shape[1] % SCAN_ALIGN:
+        raise ValueError(
+            f"scan width {x.shape[1]} not a multiple of SCAN_ALIGN "
+            f"({SCAN_ALIGN}); pad the gathered block")
+    d = jax.lax.map(lambda qx: sqdist_bdrd(qx[0][None], qx[1][None])[0],
+                    (q.astype(jnp.float32), x.astype(jnp.float32)))
+    return jnp.where(mask, d, INF)
 
 
 def _sqdist_kernel(q_ref, x_ref, mask_ref, o_ref):

@@ -36,6 +36,25 @@ def batched_sqdist(q, x, mask=None):
     return _distance.sqdist_masked(q, x, mask, interpret=_interpret())
 
 
+def masked_scan_dist(q, x, mask):
+    """Pre-filter scan distance block: q [B,d], x [B,V,d] gathered valid
+    rows (V a multiple of distance.SCAN_ALIGN), mask [B,V] -> [B,V] f32
+    with +inf on masked pad entries.
+
+    On TPU this is the fused masked-distance Pallas kernel (`sqdist_masked`
+    — the scan plan reuses the traversal's distance kernel with the bitmap
+    gather as its mask). On CPU it dispatches to the per-lane-deterministic
+    host path instead: the batched kernel's values depend on the lane count,
+    and the scan plan's bit-identity guarantees (vs the bruteforce oracle,
+    and scheduled vs one-shot) need every (query, row) pair to evaluate to
+    the same bits in any batch shape. The kernel itself is still
+    interpret-validated against the host path in tests/test_planner.py.
+    """
+    if _interpret():
+        return _distance.scan_sqdist_lanes(q, x, mask)
+    return _distance.sqdist_masked(q, x, mask)
+
+
 def queue_merge(dist, payload, new_dist, new_payload):
     """Merge a **sorted-ascending** [B,M] buffer with raw [B,R] entries.
 

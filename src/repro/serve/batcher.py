@@ -30,6 +30,14 @@ Since filters are compiled predicate programs, batches mix requests of any
 boolean structure — FIFO order alone decides who shares a batch. Program
 rows are padded to a shared (slot, term) shape per batch, rounded up to a
 power of two so the jit cache sees a bounded set of program shapes.
+
+**Plan-keyed queues.** Under the planner (serve plan "auto"/"widen") a
+probed request carries a chosen execution plan. Traverse and widen lanes
+resume under *different* SearchConfigs (the widened frontier changes the
+gather), so a resume batch must be plan-homogeneous: the bucket queues are
+keyed by (plan, bucket) and opportunistic riders are drawn only from the
+same plan's higher buckets. Scan-routed lanes never enter the batcher at
+all — the scan plan is terminal and executes inside the ingress pump.
 """
 from __future__ import annotations
 
@@ -75,7 +83,11 @@ class MicroBatcher:
                                          lane_width}))
         self.buckets = tuple(buckets)
         self.fill = fill
-        self._queues: list[deque[Request]] = [deque() for _ in buckets]
+        # (plan → bucket ladder); legacy requests (plan None) resume as
+        # "traverse", so a planner-free deployment only ever populates one
+        self.plans = ("traverse", "widen")
+        self._queues: dict[str, list[deque[Request]]] = {
+            p: [deque() for _ in buckets] for p in self.plans}
 
     def width_for(self, n: int) -> int:
         """Smallest configured lane width that fits `n` requests."""
@@ -95,14 +107,20 @@ class MicroBatcher:
     def enqueue(self, req: Request, bucket: int | None = None) -> int:
         """Queue a probed request; default routing is by its predicted
         budget, an explicit index supports the escalate policy's requeues.
+        The queue ladder is the one for the request's chosen plan (None =
+        legacy traverse).
 
         Queues are kept ordered by arrival: a requeued request (rider or
         escalated slice) carries its original arrival and must sit ahead of
         newer work, or the oldest-head dispatch rule and the batch_wait gate
         would under-serve exactly the hard-tail requests being time-sliced.
         Fresh submissions arrive in order, so the scan is O(1) for them."""
+        plan = req.plan or "traverse"
+        if plan not in self.plans:
+            raise ValueError(f"plan {plan!r} cannot be bucketed "
+                             f"(resumable plans: {self.plans})")
         i = self.bucket_of(req.budget) if bucket is None else bucket
-        q = self._queues[i]
+        q = self._queues[plan][i]
         if q and q[-1].arrival > req.arrival:
             pos = len(q)
             while pos > 0 and q[pos - 1].arrival > req.arrival:
@@ -113,36 +131,42 @@ class MicroBatcher:
         return i
 
     def depth(self) -> int:
-        return sum(len(q) for q in self._queues)
+        return sum(len(q) for ladder in self._queues.values() for q in ladder)
 
     def head_arrival(self) -> float | None:
-        heads = [q[0].arrival for q in self._queues if q]
+        heads = [q[0].arrival
+                 for ladder in self._queues.values() for q in ladder if q]
         return min(heads) if heads else None
 
-    def bucket_heads(self) -> list[tuple[float, int, int]]:
-        """(head arrival, bucket index, batchable count) per non-empty
-        bucket — the scheduler's dispatch-gating view. Any structure
-        batches together, so the count is simply the queue depth."""
-        return [(q[0].arrival, i, len(q))
-                for i, q in enumerate(self._queues) if q]
+    def bucket_heads(self) -> list[tuple[float, tuple[str, int], int]]:
+        """(head arrival, (plan, bucket index), batchable count) per
+        non-empty bucket — the scheduler's dispatch-gating view. Any
+        *structure* batches together (count = queue depth), but plans do
+        not: each (plan, bucket) queue dispatches alone."""
+        return [(q[0].arrival, (p, i), len(q))
+                for p, ladder in self._queues.items()
+                for i, q in enumerate(ladder) if q]
 
     # ------------------------------------------------------- batch forming ----
-    def form_batch(self, bucket: int | None = None,
-                   ) -> tuple[int, list[Request], int | None]:
-        """Pop a batch of up to lane_width requests from `bucket` (default:
-        the non-empty bucket with the oldest head — FIFO-fair across
-        buckets). Compiled programs make batches structure-agnostic, so the
-        FIFO prefix is taken as-is. Returns (bucket index, requests, cap);
-        requests is [] when idle."""
-        live = [i for i, q in enumerate(self._queues) if q]
+    def form_batch(self, bucket: tuple[str, int] | None = None,
+                   ) -> tuple[tuple[str, int], list[Request], int | None]:
+        """Pop a batch of up to lane_width requests from `bucket` — a
+        (plan, index) pair (default: the non-empty bucket with the oldest
+        head — FIFO-fair across plans and buckets). Compiled programs make
+        batches structure-agnostic, so the FIFO prefix is taken as-is.
+        Returns ((plan, bucket index), requests, cap); requests is [] when
+        idle."""
+        live = [(p, i) for p, ladder in self._queues.items()
+                for i, q in enumerate(ladder) if q]
         if not live:
-            return -1, [], None
-        i = (min(live, key=lambda j: self._queues[j][0].arrival)
-             if bucket is None else bucket)
-        reqs = take_requests(self._queues[i], self.lane_width)
+            return ("traverse", -1), [], None
+        p, i = (min(live, key=lambda pi: self._queues[pi[0]][pi[1]][0].arrival)
+                if bucket is None else bucket)
+        ladder = self._queues[p]
+        reqs = take_requests(ladder[i], self.lane_width)
         cap = self.buckets[i]
         if not reqs:                  # explicitly-named bucket was empty
-            return i, [], cap
+            return (p, i), [], cap
         fill_to = self.width_for(len(reqs))
         if self.fill and len(reqs) < fill_to and cap is not None:
             # Riders take only the PAD lanes of the batch's natural ladder
@@ -152,14 +176,16 @@ class MicroBatcher:
             # progress, clamped to this bucket's cap. Eligibility requires
             # executed < cap: a rider that already reached this cap in an
             # earlier slice would be a no-op lane (dispatch cost, no
-            # progress).
-            for j in range(i + 1, len(self._queues)):
+            # progress). Riders come from the SAME plan's higher buckets
+            # only — a widen lane cannot ride a traverse batch (different
+            # SearchConfig).
+            for j in range(i + 1, len(ladder)):
                 if len(reqs) == fill_to:
                     break
-                reqs += take_requests(self._queues[j],
+                reqs += take_requests(ladder[j],
                                       fill_to - len(reqs),
                                       pred=lambda r: r.executed < cap)
-        return i, reqs, cap
+        return (p, i), reqs, cap
 
     # ----------------------------------------------------------- assembly ----
     # `width=None` pads to the full lane_width; the scheduler passes

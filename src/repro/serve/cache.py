@@ -25,12 +25,23 @@ def request_key(req, k: int, queue_size: int, alpha: float,
                 probe_budget: int, min_budget: int = 32,
                 max_budget: int = 1 << 30, n_probes: int = 2,
                 ablate_filter: bool = False,
-                codec: str = "float32") -> str:
+                codec: str = "float32", plan: str = "traverse") -> str:
     """`codec` is the engine's codec identity (`SearchEngine.codec_key()`):
     precision tag + codec-parameter digest. Quantization changes traversal
     order and the surviving candidate pool, hence the answer — two engines
     differing only in precision (or in a retrained codebook) must never
-    share cache entries."""
+    share cache entries.
+
+    `plan` is the configured execution plan ("auto" or a forced plan). It
+    is part of the key exactly because different plans return different
+    answers (scan is exact, the traversals are approximate) — but it enters
+    the digest only when it *can* change the result: "traverse" hashes
+    identically to the pre-planner key (legacy entries stay valid), and an
+    auto completion that executed some plan X through the same bitwise path
+    a forced-X run would take is additionally stored under the forced-X key
+    by the scheduler (dual put), so auto and forced deployments share
+    entries whenever sharing is sound. See tests/test_serve.py's
+    plan-collision matrix for the exact hit/miss contract."""
     h = hashlib.sha1()
     h.update(np.ascontiguousarray(req.query, np.float32).tobytes())
     h.update(b"|filter:")
@@ -39,6 +50,8 @@ def request_key(req, k: int, queue_size: int, alpha: float,
              % (k, queue_size, alpha, probe_budget, min_budget, max_budget,
                 n_probes, ablate_filter))
     h.update(b"|codec:" + codec.encode())
+    if plan != "traverse":
+        h.update(b"|plan:" + plan.encode())
     return h.hexdigest()
 
 

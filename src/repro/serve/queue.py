@@ -55,6 +55,13 @@ class Request:
     cache_key: str | None = None      # memoized result-cache key (valid for
                                       # one scheduler's parameter set)
     budget: int | None = None         # Ŵ_q once estimated
+    plan: str | None = None           # chosen execution plan (planner mode):
+                                      # "scan" | "traverse" | "widen"; None
+                                      # until routed (legacy = traverse)
+    plan_pure: bool = False           # the executed path is bitwise the
+                                      # forced-plan path (no probe carry
+                                      # leaked into a scan) — gates the
+                                      # cache dual-put under the forced key
     executed: int = 0                 # budget target reached so far
     n_slices: int = 0                 # resume batches this request rode in
     probe_done: float | None = None

@@ -48,7 +48,11 @@ import numpy as np
 
 from repro.core.e2e import predict_budgets, probe_and_features
 from repro.core.engine import SearchEngine
+from repro.core.planner import (PLANS, choose_plans, scan_stats,
+                                stage0_scan_mask)
+from repro.core.plans import ScanStats, scan_search
 from repro.core.search import SearchConfig
+from repro.core.state import pad_lanes, take_lanes
 from repro.serve.batcher import MicroBatcher
 from repro.serve.cache import ResultCache, request_key
 from repro.serve.metrics import ServeMetrics
@@ -71,24 +75,44 @@ class ServeConfig:
     max_budget: int = 1 << 30
     ablate_filter: bool = False
     cache_capacity: int = 4096       # 0 disables the result cache
+    plan: str = "traverse"           # execution plan: "traverse" (legacy
+                                     # E2E pipeline), "scan" / "widen"
+                                     # (forced single plan), or "auto"
+                                     # (per-lane planner routing — needs a
+                                     # fitted core.planner.Planner)
 
 
 class CostAwareScheduler:
     def __init__(self, engine: SearchEngine, estimator, cfg: SearchConfig,
                  serve_cfg: ServeConfig = ServeConfig(),
-                 timer=time.perf_counter, service_model=None):
+                 timer=time.perf_counter, service_model=None, planner=None):
         """service_model: optional callable (trip count, lane width) →
         seconds. When set, pump() charges batches by the model instead of
         the wall clock — a calibrated virtual clock that makes scheduling
         simulations deterministic on machines whose speed drifts (see
         benchmarks/serve_bench.py). Real engine work still runs either way;
-        only the *charged* service time differs."""
+        only the *charged* service time differs. (Scan batches have no
+        lockstep trips; under a service model they charge ⌈σ·N / (lane
+        degree)⌉ equivalent trips, the same distance work per lane.)
+
+        planner: a fitted `core.planner.Planner`; required when
+        serve_cfg.plan is "auto" or "widen" (those route on its cost
+        heads), ignored for "traverse" (the legacy `estimator` head) and
+        "scan" (closed-form)."""
         if serve_cfg.policy not in ("direct", "escalate"):
             raise ValueError(f"unknown policy {serve_cfg.policy!r}")
+        if serve_cfg.plan not in PLANS + ("auto",):
+            raise ValueError(f"unknown plan {serve_cfg.plan!r} "
+                             f"(one of {PLANS + ('auto',)})")
+        if planner is None and serve_cfg.plan in ("auto", "widen"):
+            raise ValueError(f"plan {serve_cfg.plan!r} needs a fitted "
+                             "core.planner.Planner")
         self.engine = engine
         self.service_model = service_model
         self.estimator = estimator
+        self.planner = planner
         self.cfg = cfg
+        self.cfg_widen = dataclasses.replace(cfg, mode="widen")
         self.scfg = serve_cfg
         self.timer = timer
         self.ingress = AdmissionQueue(serve_cfg.queue_capacity)
@@ -99,7 +123,14 @@ class CostAwareScheduler:
         self.cache = (ResultCache(serve_cfg.cache_capacity)
                       if serve_cfg.cache_capacity else None)
         self.metrics = ServeMetrics()
-        self._packed = estimator.packed()  # GBDT forest, packed once
+        # GBDT forests, packed once per scheduler; which ones exist depends
+        # on the configured plan
+        self._packed = (estimator.packed()
+                        if serve_cfg.plan == "traverse" else None)
+        if planner is not None and serve_cfg.plan in ("auto", "widen"):
+            self._packed_t = planner.traverse.packed()
+            self._packed_w = planner.widen.packed()
+            self._packed_s = planner.static.packed()
         # precision is a per-engine deployment knob: the codec identity is
         # part of every cache key (resolved against THIS scheduler's cfg,
         # so a per-call precision override keys under what actually runs),
@@ -109,16 +140,19 @@ class CostAwareScheduler:
         self._rerank = engine.effective_precision(cfg) != "float32"
 
     # ------------------------------------------------------------- ingress ----
+    def _key_for(self, req: Request, plan: str) -> str:
+        s = self.scfg
+        return request_key(
+            req, self.cfg.k, self.cfg.queue_size, s.alpha,
+            s.probe_budget, s.min_budget, s.max_budget, s.n_probes,
+            s.ablate_filter, codec=self._codec, plan=plan)
+
     def _key(self, req: Request) -> str:
         # memoized on the request: the canonical-DNF serialization inside
         # request_key is a recursive Python walk, and the key is needed
         # twice per served request (submit lookup + completion put)
         if req.cache_key is None:
-            s = self.scfg
-            req.cache_key = request_key(
-                req, self.cfg.k, self.cfg.queue_size, s.alpha,
-                s.probe_budget, s.min_budget, s.max_budget, s.n_probes,
-                s.ablate_filter, codec=self._codec)
+            req.cache_key = self._key_for(req, self.scfg.plan)
         return req.cache_key
 
     def submit(self, req: Request, now: float) -> str:
@@ -170,7 +204,9 @@ class CostAwareScheduler:
             # probe batches are never gated: a probe costs probe_budget NDC
             # per lane (≪ any bucket cap), so slim probe batches are cheap,
             # and eager probing routes work into buckets sooner — which is
-            # what fills the expensive batches
+            # what fills the expensive batches. (Under a scan/auto plan the
+            # ingress pump may also *execute* scan lanes — still ungated:
+            # those lanes are exactly the cheap ones.)
             heads.append((self.ingress.head_arrival(), "probe",
                           self.batcher.lane_width))
         for arrival, i, n in self.batcher.bucket_heads():
@@ -237,8 +273,18 @@ class CostAwareScheduler:
         return np.asarray(state.res_idx), np.asarray(state.res_dist)
 
     def _pump_probe(self, now: float) -> tuple[list[Request], float]:
+        """Ingress pump. Under the legacy/forced-traversal plans this is
+        the shared early probe; under "scan" it executes the terminal scan
+        plan directly (no probe — the bitmap makes σ exact for free); under
+        "auto" it is the planner's two-stage router."""
         scfg = self.scfg
         reqs = self.ingress.take_group(self.batcher.lane_width)
+        if scfg.plan == "scan":
+            for r in reqs:
+                r.plan, r.plan_pure = "scan", True
+            return self._scan_batch(now, reqs, None)
+        if scfg.plan == "auto":
+            return self._pump_auto(now, reqs)
         cfg = self.cfg  # one static config serves every filter structure
         t0 = self.timer()
         width = self.batcher.width_for(len(reqs))
@@ -250,15 +296,22 @@ class CostAwareScheduler:
         # Stage 1 — the shared early probe, via the same probe_and_features
         # as the one-shot pipeline (per-lane budget array: pad lanes get 0).
         # Sharing the code, not just the schedule, is what keeps the
-        # scheduled == one-shot bit-identity from desynchronizing.
+        # scheduled == one-shot bit-identity from desynchronizing. The
+        # probe always runs the *post* config — the widen plan, like
+        # run_plan("widen"), widens only the resume.
         st, feats = probe_and_features(
             self.engine, cfg, queries, prog,
             jnp.asarray(lane_on * scfg.probe_budget), n_probes=scfg.n_probes)
 
-        # Stage 2 — cost estimate (same path as one-shot e2e_search).
-        budgets, _ = predict_budgets(self.estimator, feats, scfg.alpha,
+        # Stage 2 — cost estimate (same path as one-shot e2e_search /
+        # run_plan): the legacy estimator for traverse, the planner's widen
+        # head for the forced widen plan.
+        head, packed = ((self.estimator, self._packed)
+                        if scfg.plan == "traverse"
+                        else (self.planner.widen, self._packed_w))
+        budgets, _ = predict_budgets(head, feats, scfg.alpha,
                                      scfg.min_budget, scfg.max_budget,
-                                     scfg.ablate_filter, packed=self._packed)
+                                     scfg.ablate_filter, packed=packed)
         budgets = np.asarray(jax.block_until_ready(budgets))
         cnt = np.asarray(st.cnt)
         res_idx, res_dist = self._final_results(
@@ -271,6 +324,7 @@ class CostAwareScheduler:
 
         done = []
         for i, r in enumerate(reqs):
+            r.plan, r.plan_pure = scfg.plan, True
             r.budget = int(budgets[i])
             r.probe_done = now + busy
             r.executed = int(cnt[i])
@@ -285,12 +339,155 @@ class CostAwareScheduler:
                 self.batcher.enqueue(r, bucket)
         return done, busy
 
-    def _pump_bucket(self, now: float, bucket: int | None = None,
+    def _pump_auto(self, now: float, reqs: list[Request],
+                   ) -> tuple[list[Request], float]:
+        """Planner routing (plan="auto"): stage 0 compiles the bitmap and
+        routes clearly-scannable lanes to scan *without probing*; the rest
+        run the shared probe and split on the per-plan cost heads. Every
+        sub-path is the same code the one-shot `planned_search` runs, which
+        is what extends the scheduled == one-shot bit-identity to auto."""
+        scfg = self.scfg
+        t0 = self.timer()
+        width = self.batcher.width_for(len(reqs))
+        prog = self.batcher.pad_program(reqs, width)
+        stats = scan_stats(self.engine, prog)
+        s0 = np.asarray(stage0_scan_mask(
+            self.planner, stats, prog, scfg.alpha, scfg.min_budget,
+            scfg.max_budget, packed=self._packed_s))[: len(reqs)]
+        busy = self.timer() - t0 if self.service_model is None else 0.0
+        done = []
+        scan_i = np.nonzero(s0)[0]
+        if scan_i.size:
+            sub = [reqs[i] for i in scan_i]
+            for r in sub:
+                r.plan, r.plan_pure = "scan", True
+            d, b = self._scan_batch(now, sub, stats.rows(scan_i))
+            done += d
+            busy += b
+        rest_i = np.nonzero(~s0)[0]
+        if rest_i.size:
+            d, b = self._auto_probe(now, [reqs[i] for i in rest_i],
+                                    stats.rows(rest_i))
+            done += d
+            busy += b
+        return done, busy
+
+    def _auto_probe(self, now: float, reqs: list[Request],
+                    stats) -> tuple[list[Request], float]:
+        """Stage 1 of auto routing: shared probe → per-plan heads →
+        argmin route. Scan-routed lanes ("late scan" — the static head
+        kept them past stage 0) execute immediately, carrying their probe
+        counters; traverse/widen lanes enqueue into their plan's buckets."""
+        from repro.core.planner import PLAN_SCAN, PLAN_TRAVERSE
+
+        scfg = self.scfg
+        cfg = self.cfg
+        t0 = self.timer()
+        width = self.batcher.width_for(len(reqs))
+        queries = self.batcher.pad_queries(reqs, width)
+        prog = self.batcher.pad_program(reqs, width)
+        lane_on = np.zeros(width, np.int32)
+        lane_on[: len(reqs)] = 1
+        st, feats = probe_and_features(
+            self.engine, cfg, queries, prog,
+            jnp.asarray(lane_on * scfg.probe_budget), n_probes=scfg.n_probes)
+        cnt = np.asarray(st.cnt)
+        counts = np.zeros(width, np.int64)
+        counts[: len(reqs)] = stats.counts
+        ids, w_t, w_w = choose_plans(
+            self.planner, feats, cnt, counts, scfg.alpha, scfg.min_budget,
+            scfg.max_budget, packed_t=self._packed_t, packed_w=self._packed_w)
+        fin = [i for i in range(len(reqs)) if ids[i] != PLAN_SCAN
+               and int((w_t if ids[i] == PLAN_TRAVERSE else w_w)[i])
+               <= int(cnt[i])]
+        res_idx, res_dist = self._final_results(queries, st, bool(fin))
+        steps = int(np.asarray(st.hops).max())
+        busy = (self.timer() - t0 if self.service_model is None
+                else self.service_model(steps, width))
+        self.metrics.observe_batch("probe", len(reqs), width, busy, steps)
+
+        done = []
+        late = [i for i in range(len(reqs)) if ids[i] == PLAN_SCAN]
+        if late:
+            sub = [reqs[i] for i in late]
+            for r in sub:
+                # probe counters leak into the scan state: the result is
+                # NOT bitwise the forced-scan path (cnt differs), so no
+                # dual-put under the forced key
+                r.plan, r.plan_pure = "scan", False
+            d, b = self._scan_batch(now, sub, stats.rows(late),
+                                    base=take_lanes(st, np.asarray(late)))
+            done += d
+            busy += b
+        for i, r in enumerate(reqs):
+            if ids[i] == PLAN_SCAN:
+                continue
+            plan = "traverse" if ids[i] == PLAN_TRAVERSE else "widen"
+            r.plan, r.plan_pure = plan, True
+            r.budget = int((w_t if ids[i] == PLAN_TRAVERSE else w_w)[i])
+            r.probe_done = now + busy
+            r.executed = int(cnt[i])
+            if r.budget <= r.executed:
+                self._finish(r, res_idx[i], res_dist[i], cnt[i], now + busy)
+                done.append(r)
+            else:
+                r.state = (st, i)
+                bucket = (0 if self.scfg.policy == "escalate" else None)
+                self.batcher.enqueue(r, bucket)
+        return done, busy
+
+    def _scan_batch(self, now: float, reqs: list[Request], stats,
+                    base=None) -> tuple[list[Request], float]:
+        """Execute the terminal scan plan for a group of requests. `stats`
+        is the lanes' ScanStats rows (None → compile here, the forced-scan
+        path); `base` carries probe states for late-scan lanes. The batch
+        pads to the lane-width ladder like every other micro-batch — the
+        per-lane-deterministic scan distance path makes the padding (and
+        any batch composition) invisible in the results."""
+        t0 = self.timer()
+        width = self.batcher.width_for(len(reqs))
+        queries = self.batcher.pad_queries(reqs, width)
+        prog = self.batcher.pad_program(reqs, width)
+        pad = width - len(reqs)
+        if stats is None:
+            stats = scan_stats(self.engine, prog)  # pads match nothing
+        elif pad:
+            stats = ScanStats(
+                valid=np.pad(stats.valid, ((0, pad), (0, 0))),
+                counts=np.pad(stats.counts, (0, pad)),
+                clause_frac=np.pad(stats.clause_frac, ((0, pad), (0, 0))),
+                n=stats.n)
+        if base is not None and pad:
+            base = pad_lanes(base, pad)
+        st = scan_search(self.engine, self.cfg, queries, prog, stats=stats,
+                         base_state=base)
+        jax.block_until_ready(st.res_dist)
+        res_idx, res_dist = self._final_results(queries, st, True)
+        cnt = np.asarray(st.cnt)
+        # scan has no lockstep trips; charge the service model the
+        # distance-equivalent count (σ·N work / the per-trip lane degree)
+        steps = int(np.ceil(stats.counts.max(initial=0)
+                            / max(self.cfg.degree, 1)))
+        busy = (self.timer() - t0 if self.service_model is None
+                else self.service_model(steps, width))
+        self.metrics.observe_batch("scan", len(reqs), width, busy, steps)
+        done = []
+        for i, r in enumerate(reqs):
+            r.budget = int(cnt[i])
+            r.executed = int(cnt[i])
+            self._finish(r, res_idx[i], res_dist[i], cnt[i], now + busy)
+            done.append(r)
+        return done, busy
+
+    def _pump_bucket(self, now: float, bucket: tuple[str, int] | None = None,
                      ) -> tuple[list[Request], float]:
-        idx, reqs, cap = self.batcher.form_batch(bucket)
+        (plan, idx), reqs, cap = self.batcher.form_batch(bucket)
         if not reqs:
             return [], 0.0
-        cfg = self.cfg
+        # plan-homogeneous batch (the batcher keys queues by plan): widen
+        # lanes resume under the widened-frontier config, traverse lanes
+        # under the session config — same resume-exact lockstep either way
+        cfg = self.cfg_widen if plan == "widen" else self.cfg
         t0 = self.timer()
         width = self.batcher.width_for(len(reqs))
         queries = self.batcher.pad_queries(reqs, width)
@@ -310,8 +507,8 @@ class CostAwareScheduler:
         steps = int((np.asarray(out.hops) - entry_hops).max())
         busy = (self.timer() - t0 if self.service_model is None
                 else self.service_model(steps, width))
-        self.metrics.observe_batch(f"bucket{idx}", len(reqs), width, busy,
-                                   steps)
+        label = f"bucket{idx}" if plan == "traverse" else f"bucket{idx}:{plan}"
+        self.metrics.observe_batch(label, len(reqs), width, busy, steps)
 
         done = []
         for i, r in enumerate(reqs):
@@ -335,6 +532,16 @@ class CostAwareScheduler:
         req.completed = at
         if self.cache is not None:
             self.cache.put(self._key(req), req.res_idx, req.res_dist, req.ndc)
+            if self.scfg.plan == "auto" and req.plan_pure and req.plan:
+                # dual put: this auto completion executed its chosen plan
+                # through the exact bitwise path a forced-plan scheduler
+                # would have taken (no probe carry leaked into a scan), so
+                # the result is also valid under the forced key — forced
+                # and auto deployments share entries whenever sound. Late
+                # scans (plan_pure=False) skip this: their NDC includes the
+                # probe a forced scan never pays.
+                self.cache.put(self._key_for(req, req.plan),
+                               req.res_idx, req.res_dist, req.ndc)
         self.metrics.complete(req)
 
     def summary(self) -> dict:

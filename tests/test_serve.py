@@ -109,8 +109,8 @@ def test_opportunistic_fill_rides_spare_lanes():
         b.enqueue(_req(i, budget=50 + i, arrival=float(i)))
     for i in (3, 4):
         b.enqueue(_req(i, budget=5000, arrival=3.0 + i))
-    idx, reqs, cap = b.form_batch()
-    assert idx == 0 and cap == 100
+    (plan, idx), reqs, cap = b.form_batch()
+    assert plan == "traverse" and idx == 0 and cap == 100
     # 3 residents → natural width 4 → exactly one free pad lane for a rider
     assert [r.rid for r in reqs] == [0, 1, 2, 3]
     # the rider runs a bounded slice: its lane budget is clamped to the cap
@@ -137,8 +137,8 @@ def test_batcher_rejects_unordered_buckets():
 def test_form_batch_on_empty_named_bucket():
     b = MicroBatcher(lane_width=4, buckets=(100, None), fill=True)
     b.enqueue(_req(0, budget=5000, arrival=0.0))     # lives in bucket 1
-    idx, reqs, cap = b.form_batch(bucket=0)          # bucket 0 is empty
-    assert (idx, reqs, cap) == (0, [], 100)
+    key, reqs, cap = b.form_batch(bucket=("traverse", 0))  # bucket 0 empty
+    assert (key, reqs, cap) == (("traverse", 0), [], 100)
     assert b.depth() == 1                            # nothing was lost
 
 
@@ -327,6 +327,82 @@ def test_cache_keys_canonicalize_composite_filters():
     # a bare leaf and its legacy-field spelling collide (the shim contract)
     legacy = Request(1, q, PRED_CONTAIN, label_mask=np.asarray([8], np.uint32))
     assert request_key(legacy, **base) == key(Contain([3]))
+
+
+@pytest.fixture(scope="module")
+def auto_planner(world):
+    from repro.core import fit_planner, generate_plan_training_data
+
+    ds, engine, cfg, est = world
+    wl = make_composite_workload(ds, batch=96, seed=11, structure="mixed",
+                                 selectivities=(0.01, 0.1, 0.3))
+    data = generate_plan_training_data(engine, ds, wl, cfg, probe_budget=48,
+                                       chunk=48)
+    return fit_planner(data, probe_budget=48, n_trees=60, depth=4)
+
+
+def test_cache_plan_collision_matrix(world, auto_planner):
+    """The plan ∈ key contract: plan enters the cache key exactly when it
+    can change the answer. traverse == legacy key; scan/widen/auto are
+    pairwise distinct; an auto completion is dual-put under the chosen
+    forced key iff it executed the exact bitwise forced path (plan_pure)."""
+    ds, engine, cfg, est = world
+    base = dict(k=5, queue_size=64, alpha=1.5, probe_budget=48)
+    probe = Request(0, np.ones(ds.dim, np.float32),
+                    expr=And(Contain([3]), Range(0.25, 0.75)))
+    keys = {p: request_key(probe, **base, plan=p)
+            for p in ("traverse", "scan", "widen", "auto")}
+    assert keys["traverse"] == request_key(probe, **base)  # legacy stable
+    assert len(set(keys.values())) == 4                    # pairwise distinct
+
+    # end-to-end: run an auto scheduler, then read the cache through every
+    # forced-plan key — only the chosen plan's key may hit, and only when
+    # the executed path was plan-pure
+    scfg = ServeConfig(lane_width=8, buckets=(256, None), probe_budget=48,
+                       plan="auto")
+    sched = CostAwareScheduler(engine, est, cfg, scfg, planner=auto_planner)
+    wl = make_composite_workload(ds, batch=8, seed=21, structure="mixed",
+                                 selectivities=(0.01, 0.3))
+    reqs = requests_from_workload(wl)
+    for r in reqs:
+        assert sched.submit(r, 0.0) == "queued"
+    sched.run_until_idle(0.0)
+    plans = {"scan", "traverse", "widen"}
+    assert all(r.plan in plans for r in reqs)
+    for r in reqs:
+        hit = {p: sched.cache.get(sched._key_for(r, p)) is not None
+               for p in plans | {"auto"}}
+        assert hit["auto"]                       # always stored under auto
+        assert hit[r.plan] == r.plan_pure        # dual-put iff bitwise-pure
+        assert not any(hit[p] for p in plans - {r.plan})  # others never
+
+    # a forced-plan scheduler sharing the cache hits exactly those entries
+    pure = [r for r in reqs if r.plan_pure]
+    assert pure                                  # routing produced pure lanes
+    victim = pure[0]
+    pos = reqs.index(victim)
+    forced_same = CostAwareScheduler(
+        engine, est, cfg, dataclasses.replace(scfg, plan=victim.plan),
+        planner=auto_planner)
+    forced_same.cache = sched.cache
+    assert forced_same.submit(requests_from_workload(wl)[pos], 1.0) == "hit"
+    other = next(p for p in plans if p != victim.plan)
+    forced_other = CostAwareScheduler(
+        engine, est, cfg, dataclasses.replace(scfg, plan=other),
+        planner=auto_planner)
+    forced_other.cache = sched.cache
+    assert (forced_other.submit(requests_from_workload(wl)[pos], 1.0)
+            == "queued")                         # forced-Y never sees X's entry
+
+    # late-scan completions (probe counters leaked into NDC) must NOT be
+    # dual-put: a forced-scan run never pays the probe
+    late = Request(99, np.full(ds.dim, 0.5, np.float32),
+                   expr=Contain([5]), arrival=2.0)
+    late.plan, late.plan_pure = "scan", False
+    sched._finish(late, np.full(cfg.k, -1, np.int32),
+                  np.full(cfg.k, np.inf, np.float32), 17, 2.0)
+    assert sched.cache.get(sched._key(late)) is not None
+    assert sched.cache.get(sched._key_for(late, "scan")) is None
 
 
 def test_uncompilable_filter_rejected_at_submit(world):
