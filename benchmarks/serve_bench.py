@@ -115,6 +115,7 @@ def calibrate_service_model(engine, cfg, ds, widths, probe, queue_size):
     import time as _time
 
     import jax
+    import jax.numpy as jnp
 
     from repro.data import make_label_workload
 
@@ -125,11 +126,15 @@ def calibrate_service_model(engine, cfg, ds, widths, probe, queue_size):
         st = engine.search(cfg, wl.queries, wl.spec, probe)
         entry_hops = np.asarray(jax.block_until_ready(st).hops)
 
+        # search donates the resume state — each timed rep gets its own copy
+        # so `st` survives the repetitions
         def noop():
-            return engine.search(cfg, wl.queries, wl.spec, probe, state=st)
+            return engine.search(cfg, wl.queries, wl.spec, probe,
+                                 state=jax.tree.map(jnp.copy, st))
 
         def run():
-            return engine.search(cfg, wl.queries, wl.spec, budget, state=st)
+            return engine.search(cfg, wl.queries, wl.spec, budget,
+                                 state=jax.tree.map(jnp.copy, st))
 
         jax.block_until_ready(noop())
         c0 = min(_timed(noop) for _ in range(5))

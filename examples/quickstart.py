@@ -5,11 +5,18 @@ the engine on a compressed vector store.
 
     PYTHONPATH=src python examples/quickstart.py [--precision pq]
                                                  [--plan auto|scan|widen|traverse]
+                                                 [--backend pallas_persistent]
 
 --precision int8|pq builds the engine with a quantized index: the
 traversal evaluates distances in the compressed domain (int8 ADC dot / PQ
 lookup tables) and every pipeline result is exact-reranked in float32 —
 same API, ~4–13x smaller hot-loop index.
+
+--backend picks the traversal hot path: "pallas" (default, fused
+single-step kernel), "pallas_persistent" (same kernel arithmetic, up to
+SearchConfig.steps_per_launch steps amortized per dispatch with early-exit
+lane compaction — bit-identical results, fewer launches), or "dense" (jnp
+reference).
 
 --plan picks the filter-execution strategy for the final composite-filter
 step: "scan" (pre-filter: bitmap + masked exact top-k over the valid set),
@@ -43,6 +50,12 @@ def main():
                     choices=["auto", "scan", "widen", "traverse"],
                     help="filter-execution strategy for the planned search "
                          "step (auto = per-lane planner routing)")
+    ap.add_argument("--backend",
+                    default=os.environ.get("REPRO_BACKEND", "pallas"),
+                    choices=["dense", "pallas", "pallas_persistent"],
+                    help="traversal backend (pallas_persistent groups "
+                         "steps_per_launch steps per dispatch; results are "
+                         "bit-identical to pallas)")
     args = ap.parse_args()
 
     print("== 1. synthetic attributed vectors (clustered, label-correlated)")
@@ -53,8 +66,7 @@ def main():
     graph = build_graph_index(ds.vectors, degree=24, seed=0)
     print(f"   built in {time.time()-t0:.1f}s, mean degree "
           f"{graph.out_degrees().mean():.1f}")
-    engine = SearchEngine.build(ds, graph,
-                                backend=os.environ.get("REPRO_BACKEND", "pallas"),
+    engine = SearchEngine.build(ds, graph, backend=args.backend,
                                 precision=args.precision)
     if args.precision != "float32":
         from repro.quant import store_ratio

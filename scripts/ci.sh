@@ -23,6 +23,7 @@ CHUNKS=(
   "tests/test_system.py"
   "tests/test_serve.py"
   "tests/test_planner.py"
+  "tests/test_persistent.py"
   "tests/test_distributed.py"
   "tests/test_models_smoke.py tests/test_dryrun_small.py"
 )
@@ -53,6 +54,12 @@ python -m benchmarks.filter_algebra --quick || fail=1
 # world and does not overwrite BENCH_quant.json.
 echo "=== quant smoke ==="
 python -m benchmarks.quant_bench --quick || fail=1
+
+# Persistent-backend smoke: multi-step launch grouping + donation + lane
+# compaction end to end, parity-asserted against the single-step backend.
+# --quick shrinks the world and does not overwrite BENCH_persistent.json.
+echo "=== persistent smoke ==="
+python -m benchmarks.persistent_bench --quick || fail=1
 
 # Planner smoke: scan / widen / traverse + per-lane routing across a
 # selectivity sweep, recall vs the brute-force oracle and NDC vs the best

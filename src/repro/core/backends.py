@@ -13,6 +13,14 @@ Registered backends:
            applies the filter/visited mask, and merges queue + result buffers
            with bitonic top-M/top-K networks — no argsort, one VMEM pass
            (see repro.kernels.fused_step).
+  pallas_persistent
+           same per-step hot path, but `persistent = True` makes the search
+           layer amortize dispatch across up to cfg.steps_per_launch steps:
+           on TPU (post mode) via the persistent multi-step kernel
+           (repro.kernels.persistent_step) whose state stays VMEM-resident,
+           elsewhere via launch-grouped stepping with eager active-lane
+           compaction between launches (core/search.py). Per-step results
+           are bit-identical to "pallas" at every step boundary.
 
 Both backends evaluate compressed-domain distances when the step hands them
 a `QuantGather` (cfg.precision "int8" | "pq", see repro.quant): dense and
@@ -202,3 +210,19 @@ class PallasBackend:
         cand_idx, cand_exp, cand_valid = kops.unpack_payload(cand_pay)
         return (cand_dist, cand_idx, cand_exp, cand_valid, res_dist, res_idx,
                 valid, clause_add)
+
+
+@register_backend("pallas_persistent")
+class PallasPersistentBackend(PallasBackend):
+    """Multi-step launch amortization over the fused pallas hot path.
+
+    The per-step arithmetic is inherited unchanged from `PallasBackend` —
+    that is what keeps every step boundary bit-identical to the single-step
+    path. The `persistent` flag is what the search layer keys on to group
+    up to `cfg.steps_per_launch` steps per dispatch: the VMEM-resident
+    multi-step kernel on TPU (kernels/persistent_step.py), launch-grouped
+    stepping with eager active-lane compaction on other platforms
+    (`run_search_persistent` in core/search.py).
+    """
+
+    persistent = True

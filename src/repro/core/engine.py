@@ -35,7 +35,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core.search import SearchConfig, SearchState, run_search
+from repro.core.search import (SearchConfig, SearchState, get_backend,
+                               run_search, run_search_persistent)
 from repro.core.state import init_state, pad_lanes  # noqa: F401  (re-export)
 from repro.data.synthetic import AttributedDataset
 from repro.distributed.sharding import batch_spec
@@ -223,6 +224,18 @@ class SearchEngine:
         budgets = jnp.broadcast_to(jnp.asarray(budgets, jnp.int32), (b,))
         gt = None if gt_dist is None else jnp.asarray(gt_dist, jnp.float32)
         if self.mesh is None:
+            # Persistent backends go through the eager launch-loop driver:
+            # same bit-exact results, but finished lanes are compacted away
+            # between multi-step launches instead of riding as no-ops (and
+            # on TPU each launch is the VMEM-resident multi-step kernel).
+            # Under a mesh the traced run_search handles persistence via its
+            # launch-grouped loop — host compaction can't cross shard_map.
+            if getattr(get_backend(cfg.backend), "persistent", False):
+                return run_search_persistent(
+                    cfg, q, prog, self.base_vectors, attrs, self.neighbors,
+                    budgets, self.entry_point, state=state, gt_dist=gt,
+                    quant=quant,
+                )
             return run_search(
                 cfg, q, prog, self.base_vectors, attrs, self.neighbors,
                 budgets, self.entry_point, state=state, gt_dist=gt,

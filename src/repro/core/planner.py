@@ -41,6 +41,7 @@ from __future__ import annotations
 
 import dataclasses
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -149,7 +150,10 @@ def generate_plan_training_data(
                                    n_probes, gt_dist=conv_dist)
         labels = {}
         for key, c, carry in (("t", cfg, st), ("w", cfg_w, st)):
-            fin = engine.search(c, q, prog, BIG_BUDGET, state=carry,
+            # search donates the resume carry — hand each plan its own copy
+            # so the shared probe state survives the first resume
+            fin = engine.search(c, q, prog, BIG_BUDGET,
+                                state=jax.tree.map(jnp.copy, carry),
                                 gt_dist=conv_dist)
             cc = np.asarray(fin.conv_cnt)
             conv = cc > 0

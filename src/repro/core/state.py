@@ -53,6 +53,10 @@ class SearchConfig:
     greedy_stop: bool = False  # optional: stop when best cand > worst result
     backend: str | None = None # TraversalBackend name; None → inherit the
                                # engine default (or "dense" standalone)
+    steps_per_launch: int = 8  # persistent backends: lockstep steps grouped
+                               # into one dispatch (VMEM-resident multi-step
+                               # kernel on TPU, launch-grouped host stepping
+                               # elsewhere). Ignored by single-step backends.
     use_pallas: bool = False   # dense backend: route distances through Pallas
     precision: str | None = None  # "float32" | "int8" | "pq"; None → inherit
                                # the engine's precision ("float32" standalone).
@@ -195,6 +199,17 @@ def concat_lanes(trees):
     if len(trees) == 1:
         return trees[0]
     return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *trees)
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def put_lanes(tree, sub, idx):
+    """Scatter `sub`'s lanes back into `tree` at rows `idx` (inverse of
+    take_lanes). Donates the full-width tree: the scatter updates buffers in
+    place instead of copying ~17 [B, ...] leaves per launch. Duplicate rows
+    in `idx` are fine when the duplicated lanes carry identical values (the
+    persistent driver pads its selection by repeating a lane)."""
+    idx = jnp.asarray(idx, jnp.int32)
+    return jax.tree.map(lambda a, s: a.at[idx].set(s), tree, sub)
 
 
 @functools.partial(jax.jit, static_argnames=("pad",))

@@ -27,6 +27,7 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 from repro.core.state import INF, SearchConfig, SearchState
+from repro.quant.codecs import QuantGather
 
 
 def gather_frontier(cfg: SearchConfig, neighbors, u_safe):
@@ -120,8 +121,6 @@ def make_step(cfg: SearchConfig, backend, queries, prog, base_vectors, attrs,
         labels_g = label_attrs[nb_safe]                       # [B, R', W]
         values_g = value_attrs[nb_safe]                       # [B, R', V]
         if compressed:
-            from repro.quant.codecs import QuantGather
-
             xv = None  # bandwidth point: float vectors stay out of the loop
             codes_g = quant.codes[nb_safe]                    # [B,R',d|S·L]
             if codes_g.dtype == jnp.uint8:

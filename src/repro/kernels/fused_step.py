@@ -105,40 +105,35 @@ def _program_valid_kernel(kinds, masks, lo, hi, vattr, neg, term, active,
     return valid, sats
 
 
-def _program_and_merge(d, nb, is_new,
-                       kinds_ref, masks_ref, lo_ref, hi_ref, vattr_ref,
-                       neg_ref, term_ref, tact_ref, lab_ref, val_ref,
-                       cd_ref, cp_ref, rd_ref, ri_ref,
-                       ocd_ref, ocp_ref, ord_ref, ori_ref, ov_ref, occ_ref,
-                       *, m, k, wq, wr, pre, n_clause):
-    """Shared kernel tail: filter program, masking, both bitonic merges.
+def _merge_core(d, nb, is_new, kinds, masks, lo, hi, vattr, neg, term_pack,
+                tact, labels, values, cd, cp, rd, ri,
+                *, m, k, wq, wr, pre, n_clause):
+    """Value-level shared tail: filter program, masking, both bitonic merges.
 
-    Every fused-step kernel variant (float32 MXU distances, int8 ADC, PQ
-    ADC) computes its [bB, R] distance block `d` and delegates the rest
-    here, so the program evaluation and merge dataflow can never diverge
-    between precision modes.
+    Pure function of the step's values — no refs — so it is callable both
+    from the single-step kernels below (via the ref-plumbing wrapper
+    `_program_and_merge`) and per step from the persistent multi-step
+    kernel (kernels.persistent_step), whose state lives in VMEM scratch
+    across steps. Returns (cand_dist, cand_pay, res_dist, res_idx,
+    valid [bB, R] bool, clause_counts [bB, C] i32).
     """
     # ---- compiled filter program on the gathered attribute words ----
     # (kinds == -1 never matches a primitive tag; the active mask rides in
-    # term_ref's sign bit — see fused_step packing below)
-    term_pack = term_ref[...]
+    # term_pack's sign bit — see fused_step packing below)
     active = term_pack >= 0
     term = jnp.maximum(term_pack, 0)
     pvalid, sats = _program_valid_kernel(
-        kinds_ref[...], masks_ref[...], lo_ref[...], hi_ref[...],
-        vattr_ref[...], neg_ref[...], term, active, tact_ref[...],
-        lab_ref[...], val_ref[...])
+        kinds, masks, lo, hi, vattr, neg, term, active, tact, labels, values)
     valid = pvalid & is_new
     dmask = valid if pre else is_new
 
-    ov_ref[...] = valid.astype(jnp.int32)
     counts = []
     for c in range(n_clause):
         if c < len(sats):
             counts.append((sats[c] & is_new).sum(axis=1).astype(jnp.int32))
         else:
             counts.append(jnp.zeros(nb.shape[:1], jnp.int32))
-    occ_ref[...] = jnp.stack(counts, axis=1)
+    occ = jnp.stack(counts, axis=1)
 
     # ---- mask: non-scored neighbors never enter the buffers ----
     dd = jnp.where(dmask, d, INF)
@@ -146,14 +141,42 @@ def _program_and_merge(d, nb, is_new,
     new_pay = jnp.where(dmask, nb | (valid.astype(jnp.int32) << 30), -1)
 
     # ---- candidate-queue merge (bitonic top-M) ----
-    ocd_ref[...], ocp_ref[...] = merge_topm(
-        cd_ref[...], cp_ref[...], dd, new_pay, m, wq)
+    ocd, ocp = merge_topm(cd, cp, dd, new_pay, m, wq)
 
     # ---- result-set merge (valid only, bitonic top-K) ----
     res_in = jnp.where(valid & dmask, dd, INF)
     res_pay = jnp.where(valid & dmask, nb, -1)
-    ord_ref[...], ori_ref[...] = merge_topm(
-        rd_ref[...], ri_ref[...], res_in, res_pay, k, wr)
+    ordd, ori = merge_topm(rd, ri, res_in, res_pay, k, wr)
+    return ocd, ocp, ordd, ori, valid, occ
+
+
+def _program_and_merge(d, nb, is_new,
+                       kinds_ref, masks_ref, lo_ref, hi_ref, vattr_ref,
+                       neg_ref, term_ref, tact_ref, lab_ref, val_ref,
+                       cd_ref, cp_ref, rd_ref, ri_ref,
+                       ocd_ref, ocp_ref, ord_ref, ori_ref, ov_ref, occ_ref,
+                       *, m, k, wq, wr, pre, n_clause):
+    """Ref-plumbing wrapper over `_merge_core` for the single-step kernels.
+
+    Every fused-step kernel variant (float32 MXU distances, int8 ADC, PQ
+    ADC) computes its [bB, R] distance block `d` and delegates the rest
+    here, so the program evaluation and merge dataflow can never diverge
+    between precision modes (or between the single-step and persistent
+    kernels, which share `_merge_core`).
+    """
+    ocd, ocp, ordd, ori, valid, occ = _merge_core(
+        d, nb, is_new,
+        kinds_ref[...], masks_ref[...], lo_ref[...], hi_ref[...],
+        vattr_ref[...], neg_ref[...], term_ref[...], tact_ref[...],
+        lab_ref[...], val_ref[...],
+        cd_ref[...], cp_ref[...], rd_ref[...], ri_ref[...],
+        m=m, k=k, wq=wq, wr=wr, pre=pre, n_clause=n_clause)
+    ov_ref[...] = valid.astype(jnp.int32)
+    occ_ref[...] = occ
+    ocd_ref[...] = ocd
+    ocp_ref[...] = ocp
+    ord_ref[...] = ordd
+    ori_ref[...] = ori
 
 
 def _fused_step_kernel(q_ref, x_ref, nb_ref, new_ref, lab_ref, val_ref,

@@ -314,6 +314,25 @@ def decode_pq(index: PQIndex, codes=None):
     return gathered.reshape(n, levels, s, dsub).sum(axis=1).reshape(n, s * dsub)
 
 
+def pad_rows_for_dma(arr, multiple: int = 128):
+    """Zero-pad the trailing axis of a per-node row store to a lane multiple.
+
+    The persistent traversal kernel (kernels/persistent_step.py) gathers
+    node rows — float vectors, int8 codes, widened PQ codes, packed
+    attribute words — straight from HBM with one async copy per row;
+    padding every row to a 128-lane multiple keeps each copy a clean,
+    tileable VMEM landing. Zero fill is semantics-free for every consumer:
+    dot-product contractions against zero-padded queries, sliced-off PQ
+    slots, and ignored attribute columns.
+    """
+    a = jnp.asarray(arr)
+    pad = (-a.shape[-1]) % multiple
+    if pad == 0:
+        return a
+    widths = ((0, 0),) * (a.ndim - 1) + ((0, pad),)
+    return jnp.pad(a, widths, constant_values=0)
+
+
 # ------------------------------------------------------------- dispatch ----
 def prepare_query(precision: str, index, queries):
     """Per-search query preparation (the satellite-jitted helpers above)."""

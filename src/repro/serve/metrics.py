@@ -36,11 +36,18 @@ class ServeMetrics:
     busy_time: float = 0.0
 
     def observe_batch(self, phase: str, size: int, fill: int,
-                      busy: float, steps: int = 0) -> None:
+                      busy: float, steps: int = 0, launches: int = 0,
+                      early_exit_frac: float = 0.0) -> None:
+        """`launches` is how many device dispatches the batch cost (== steps
+        for single-step backends, ≈ steps / steps_per_launch for persistent
+        ones); `early_exit_frac` is the fraction of real lanes that
+        terminated before the batch's slowest lane — the lanes a persistent
+        backend's in-launch early exit stops paying for."""
         self.n_batches += 1
         self.busy_time += busy
         self.batches.append(dict(phase=phase, size=size, lanes=fill,
-                                 busy=busy, steps=steps))
+                                 busy=busy, steps=steps, launches=launches,
+                                 early_exit=early_exit_frac))
 
     def observe_depth(self, now: float, depth: int) -> None:
         self.depth_samples.append((now, depth))
@@ -79,13 +86,17 @@ class ServeMetrics:
         by_phase = {}
         for b in self.batches:
             d = by_phase.setdefault(b["phase"],
-                                    dict(n=0, busy=0.0, size=0))
+                                    dict(n=0, busy=0.0, size=0,
+                                         launches=0, early=0.0))
             d["n"] += 1
             d["busy"] += b["busy"]
             d["size"] += b["size"]
+            d["launches"] += b.get("launches", 0)
+            d["early"] += b.get("early_exit", 0.0)
         for d in by_phase.values():
             d["mean_fill"] = d.pop("size") / d["n"]
             d["busy"] = round(d["busy"], 4)
+            d["early_exit_frac"] = round(d.pop("early") / d["n"], 4)
         out = dict(
             n_completed=self.n_completed,
             n_batches=self.n_batches,

@@ -138,6 +138,26 @@ class CostAwareScheduler:
         # before results leave the scheduler
         self._codec = engine.codec_key(cfg)
         self._rerank = engine.effective_precision(cfg) != "float32"
+        from repro.core.search import get_backend
+        self._persistent = getattr(
+            get_backend(cfg.backend or engine.backend or "dense"),
+            "persistent", False)
+
+    def _launch_stats(self, steps: int, lane_steps) -> tuple[int, float]:
+        """Dispatch accounting for one lockstep batch: a persistent backend
+        amortizes `steps` trips into ⌈steps / steps_per_launch⌉ device
+        launches (single-step backends pay one launch per trip), and
+        `early_exit_frac` is the fraction of real lanes that finished before
+        the batch's slowest — the lanes the in-launch early exit stops
+        paying for."""
+        if steps <= 0:
+            return 0, 0.0
+        spl = max(1, self.cfg.steps_per_launch)
+        launches = -(-steps // spl) if self._persistent else steps
+        lane_steps = np.asarray(lane_steps)
+        early = (float(np.mean(lane_steps < steps))
+                 if lane_steps.size else 0.0)
+        return launches, early
 
     # ------------------------------------------------------------- ingress ----
     def _key_for(self, req: Request, plan: str) -> str:
@@ -317,10 +337,13 @@ class CostAwareScheduler:
         res_idx, res_dist = self._final_results(
             queries, st,
             any(int(budgets[i]) <= int(cnt[i]) for i in range(len(reqs))))
+        lane_hops = np.asarray(st.hops)[: len(reqs)]
         steps = int(np.asarray(st.hops).max())  # lockstep trip count
         busy = (self.timer() - t0 if self.service_model is None
                 else self.service_model(steps, width))
-        self.metrics.observe_batch("probe", len(reqs), width, busy, steps)
+        launches, early = self._launch_stats(steps, lane_hops)
+        self.metrics.observe_batch("probe", len(reqs), width, busy, steps,
+                                   launches=launches, early_exit_frac=early)
 
         done = []
         for i, r in enumerate(reqs):
@@ -401,10 +424,13 @@ class CostAwareScheduler:
                and int((w_t if ids[i] == PLAN_TRAVERSE else w_w)[i])
                <= int(cnt[i])]
         res_idx, res_dist = self._final_results(queries, st, bool(fin))
+        lane_hops = np.asarray(st.hops)[: len(reqs)]
         steps = int(np.asarray(st.hops).max())
         busy = (self.timer() - t0 if self.service_model is None
                 else self.service_model(steps, width))
-        self.metrics.observe_batch("probe", len(reqs), width, busy, steps)
+        launches, early = self._launch_stats(steps, lane_hops)
+        self.metrics.observe_batch("probe", len(reqs), width, busy, steps,
+                                   launches=launches, early_exit_frac=early)
 
         done = []
         late = [i for i in range(len(reqs)) if ids[i] == PLAN_SCAN]
@@ -470,7 +496,10 @@ class CostAwareScheduler:
                             / max(self.cfg.degree, 1)))
         busy = (self.timer() - t0 if self.service_model is None
                 else self.service_model(steps, width))
-        self.metrics.observe_batch("scan", len(reqs), width, busy, steps)
+        # scan is one fused dispatch regardless of backend; no lockstep
+        # lanes to early-exit
+        self.metrics.observe_batch("scan", len(reqs), width, busy, steps,
+                                   launches=1)
         done = []
         for i, r in enumerate(reqs):
             r.budget = int(cnt[i])
@@ -504,11 +533,14 @@ class CostAwareScheduler:
             cap is None or any(r.budget <= cap for r in reqs))
         cnt = np.asarray(out.cnt)
         targets = np.asarray(budgets)
+        lane_steps = (np.asarray(out.hops) - entry_hops)[: len(reqs)]
         steps = int((np.asarray(out.hops) - entry_hops).max())
         busy = (self.timer() - t0 if self.service_model is None
                 else self.service_model(steps, width))
         label = f"bucket{idx}" if plan == "traverse" else f"bucket{idx}:{plan}"
-        self.metrics.observe_batch(label, len(reqs), width, busy, steps)
+        launches, early = self._launch_stats(steps, lane_steps)
+        self.metrics.observe_batch(label, len(reqs), width, busy, steps,
+                                   launches=launches, early_exit_frac=early)
 
         done = []
         for i, r in enumerate(reqs):
