@@ -245,6 +245,10 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="small world, no artifact write (CI smoke)")
+    ap.add_argument("--out", default=None,
+                    help="explicit output JSON path — written even with "
+                         "--quick (an explicit path never clobbers the "
+                         "committed artifact)")
     args = ap.parse_args()
     out = run(quick=args.quick)
     print(json.dumps(out, indent=2))
@@ -253,9 +257,9 @@ def main():
     print(f"\npersistent vs single-step: {sp:.2f}x "
           f"({'meets' if sp >= bar else 'BELOW'} the {bar}x bar)"
           + (" [quick mode: bar not enforced]" if args.quick else ""))
-    path = os.path.join(os.path.dirname(__file__), "..",
-                        "BENCH_persistent.json")
-    if not args.quick:  # the smoke run must not clobber the real artifact
+    path = args.out or os.path.join(os.path.dirname(__file__), "..",
+                                    "BENCH_persistent.json")
+    if args.out or not args.quick:  # smoke must not clobber the artifact
         with open(path, "w") as f:
             json.dump(out, f, indent=2)
         print(f"wrote {os.path.normpath(path)}")

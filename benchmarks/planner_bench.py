@@ -54,6 +54,10 @@ def main():
                     help="target global selectivities (conjunctions)")
     ap.add_argument("--quick", action="store_true",
                     help="small world for the ci.sh smoke run")
+    ap.add_argument("--out", default=None,
+                    help="explicit output JSON path — written even with "
+                         "--quick (an explicit path never clobbers the "
+                         "committed artifact)")
     args = ap.parse_args()
     if args.quick:
         args.corpus, args.train_queries = 3000, 96
@@ -203,11 +207,13 @@ def main():
         selective_conjunctions=sel,
         checks=checks,
     )
-    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_planner.json")
-    if not args.quick:  # the smoke run must not clobber the real artifact
+    path = args.out or os.path.join(os.path.dirname(__file__), "..",
+                                    "BENCH_planner.json")
+    if args.out or not args.quick:  # smoke must not clobber the artifact
         with open(path, "w") as f:
             json.dump(out, f, indent=2)
         print(f"# wrote {os.path.normpath(path)}")
+    if not args.quick:
         if not (checks["within_5pct_of_best_single"]
                 and checks["selective_bar_ok"]):
             raise SystemExit("planner acceptance bars FAILED (see checks)")

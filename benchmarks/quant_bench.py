@@ -138,6 +138,10 @@ def main():
     ap.add_argument("--repeats", type=int, default=20)
     ap.add_argument("--quick", action="store_true",
                     help="small world for the ci.sh smoke run")
+    ap.add_argument("--out", default=None,
+                    help="explicit output JSON path — written even with "
+                         "--quick (an explicit path never clobbers the "
+                         "committed artifact)")
     args = ap.parse_args()
     if args.quick:
         args.corpus, args.train_queries = 3000, 96
@@ -263,8 +267,9 @@ def main():
         ),
     )
     print("# acceptance:", out["acceptance"])
-    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_quant.json")
-    if not args.quick:  # the smoke run must not clobber the real artifact
+    path = args.out or os.path.join(os.path.dirname(__file__), "..",
+                                    "BENCH_quant.json")
+    if args.out or not args.quick:  # smoke must not clobber the artifact
         with open(path, "w") as f:
             json.dump(out, f, indent=2)
         print(f"# wrote {os.path.normpath(path)}")

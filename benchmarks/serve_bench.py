@@ -180,6 +180,9 @@ def main():
                          "16 contains at least one tail lane")
     ap.add_argument("--quick", action="store_true",
                     help="small world for smoke runs")
+    ap.add_argument("--out", default=None,
+                    help="output JSON path (default: repo-root "
+                         "BENCH_serve.json)")
     args = ap.parse_args()
     if args.quick:
         args.requests, args.corpus = 48, 4000
@@ -210,7 +213,8 @@ def main():
     caps = tuple(sorted(set(caps)))
     print(f"# bucket caps (from W_q p40/p70 × α): {caps}")
 
-    def make(buckets, model=None, policy="direct", wait=0.0):
+    def make(buckets, model=None, policy="direct", wait=0.0, tracer=None,
+             calibration=False):
         def mk():
             # fill=True: riders take only the pad lanes of a batch's
             # natural ladder width (free — they never widen the batch),
@@ -220,7 +224,7 @@ def main():
                 policy=policy, batch_wait=wait, probe_budget=args.probe,
                 alpha=args.alpha, cache_capacity=0,
                 queue_capacity=10 * args.requests),
-                service_model=model)
+                service_model=model, tracer=tracer, calibration=calibration)
         return mk
 
     # measure the engine's real cost constants, then everything downstream
@@ -286,6 +290,36 @@ def main():
     print(f"speedup p50/p95/p99 = {speedup['p50']:.2f}x/"
           f"{speedup['p95']:.2f}x/{speedup['p99']:.2f}x")
 
+    # -- observability arm: the winning system, fully observed ------------
+    # Same virtual-clock replay with lifecycle tracing + calibration on:
+    # results must stay bit-identical to the untraced bucketed run and the
+    # charged latency distribution must not regress (spans wrap host
+    # dispatch points only, so on the virtual clock the p99 ratio is
+    # exactly 1.0 — any drift means tracing leaked into scheduling).
+    from repro.obs import Tracer, validate_prometheus
+
+    tracer = Tracer()
+    sched_obs, done_obs = simulate(
+        make(caps + (None,), model, wait=wait, tracer=tracer,
+             calibration=True), reqs, arrivals)
+    by_rid_b = {r.rid: r for r in served["bucketed"]}
+    obs_identical = all(
+        np.array_equal(by_rid_b[r.rid].res_idx, r.res_idx)
+        and np.array_equal(by_rid_b[r.rid].res_dist, r.res_dist)
+        and by_rid_b[r.rid].ndc == r.ndc
+        for r in done_obs)
+    assert obs_identical, "traced run diverged from untraced bucketed"
+    s_obs = sched_obs.summary()
+    p99_ratio = (s_obs["latency"]["p99"] /
+                 max(rows["bucketed"]["latency"]["p99"], 1e-12))
+    assert p99_ratio < 1.05, f"traced p99 regressed {p99_ratio:.3f}x"
+    calib = sched_obs.calibration_report()
+    n_scrape = sum(validate_prometheus(sched_obs.prometheus()).values())
+    print(f"observability: traced bit-identical, p99 ratio "
+          f"{p99_ratio:.3f}x, {tracer.n_emitted} spans, "
+          f"{calib['n_records']} calibration records, "
+          f"{n_scrape} prometheus samples")
+
     out = dict(
         protocol=dict(requests=args.requests, corpus=args.corpus,
                       lane_width=args.lane_width, alpha=args.alpha,
@@ -305,8 +339,19 @@ def main():
         speedup=speedup,
         recall=recall,
         results_bit_identical=bool(identical),
+        observability=dict(
+            traced_bit_identical=bool(obs_identical),
+            p99_ratio=float(p99_ratio),
+            n_spans=int(tracer.n_emitted),
+            calibration=dict(n_records=calib["n_records"],
+                             log_rmse=calib["log_rmse"],
+                             overprediction_rate=calib["overprediction_rate"],
+                             per_plan=calib["per_plan"]),
+            prometheus_samples=int(n_scrape),
+        ),
     )
-    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+    path = args.out or os.path.join(os.path.dirname(__file__), "..",
+                                    "BENCH_serve.json")
     with open(path, "w") as f:
         json.dump(out, f, indent=2)
     print(f"# wrote {os.path.normpath(path)}")

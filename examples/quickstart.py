@@ -56,10 +56,23 @@ def main():
                     help="traversal backend (pallas_persistent groups "
                          "steps_per_launch steps per dispatch; results are "
                          "bit-identical to pallas)")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the per-query EXPLAIN lifecycle (features, "
+                         "predicted Ŵ_q, per-stage NDC/launches, "
+                         "termination reason) on every backend")
+    ap.add_argument("--corpus", type=int, default=8000,
+                    help="dataset size (shrink for smoke runs)")
+    ap.add_argument("--train-queries", type=int, default=512,
+                    help="estimator training workload size")
+    ap.add_argument("--eval-batch", type=int, default=128,
+                    help="evaluation query batch size")
+    ap.add_argument("--plan-queries", type=int, default=256,
+                    help="planner training workload size")
     args = ap.parse_args()
 
     print("== 1. synthetic attributed vectors (clustered, label-correlated)")
-    ds = make_dataset(n=8000, dim=48, n_clusters=16, alphabet_size=48, seed=0)
+    ds = make_dataset(n=args.corpus, dim=48, n_clusters=16, alphabet_size=48,
+                      seed=0)
 
     print("== 2. Vamana-style graph index (NN-descent + alpha-prune)")
     t0 = time.time()
@@ -77,7 +90,8 @@ def main():
     cfg = SearchConfig(k=10, queue_size=512, pred_kind=PRED_CONTAIN)
 
     print("== 3. offline W_q ground truth + GBDT estimator (paper 4.3)")
-    wl_train = make_label_workload(ds, batch=512, kind="contain", seed=10)
+    wl_train = make_label_workload(ds, batch=args.train_queries,
+                                   kind="contain", seed=10)
     td = generate_training_data(engine, ds, wl_train, cfg, probe_budget=96,
                                 chunk=128)
     est = CostEstimator.fit(td.features, td.w_q, n_trees=200, depth=5)
@@ -85,7 +99,8 @@ def main():
                             for k, v in est.eval_metrics(td.features, td.w_q).items()})
 
     print("== 4. E2E adaptive termination vs naive fixed beam")
-    wl = make_label_workload(ds, batch=128, kind="contain", seed=99)
+    wl = make_label_workload(ds, batch=args.eval_batch, kind="contain",
+                             seed=99)
     gt_idx, _ = filtered_knn_exact(wl.queries, ds.vectors, wl.spec,
                                    ds.labels_packed, ds.values, 10)
     for alpha in (1.0, 2.0):
@@ -126,8 +141,8 @@ def main():
                             planned_search, run_plan)
     from repro.data import make_composite_workload
 
-    wl_plan = make_composite_workload(ds, batch=256, structure="mixed",
-                                      seed=11)
+    wl_plan = make_composite_workload(ds, batch=args.plan_queries,
+                                      structure="mixed", seed=11)
     ptd = generate_plan_training_data(engine, ds, wl_plan, cfg,
                                       probe_budget=96, chunk=128)
     planner = fit_planner(ptd, probe_budget=96, n_trees=100, depth=5)
@@ -147,6 +162,35 @@ def main():
           f"mean NDC={np.asarray(st.cnt).mean():.0f} "
           f"(standard traversal above: "
           f"{np.asarray(r.state.cnt).mean():.0f})")
+
+    if args.explain:
+        print("== 7. EXPLAIN: per-query lifecycle, every backend")
+        # explain=True returns one QueryReport per lane: the probe features
+        # the prediction was made from, Ŵ_q vs the NDC actually spent,
+        # per-stage launch counts (the persistent backend's come from
+        # driver-observed dispatch counters), and the termination reason
+        # (budget = the paper's adaptive stop; queue-drained = the valid
+        # sub-graph ran out first; greedy = HNSW-style convergence).
+        from repro.obs import Tracer, format_reports
+
+        wl_x = make_label_workload(ds, batch=4, kind="contain", seed=123)
+        for backend in ("dense", "pallas", "pallas_persistent"):
+            eng_x = (engine if backend == args.backend
+                     else SearchEngine.build(ds, graph, backend=backend,
+                                             precision=args.precision))
+            tr = Tracer()
+            rx = e2e_search(eng_x, est, cfg, wl_x.queries, wl_x.spec,
+                            probe_budget=96, alpha=1.5, tracer=tr,
+                            explain=True)
+            print(f"-- backend={backend} ({tr.n_emitted} lifecycle spans)")
+            print(format_reports(rx.reports[:2], features=True))
+        # the planner's EXPLAIN includes routing: plan-stage0 / plan-select
+        # stages and per-plan execution (scan lanes terminate
+        # "scan-exhaustive" — they paid σ·N exactly, no estimator involved)
+        res = planned_search(engine, planner, cfg, wl.queries[:4], exprs[:4],
+                             probe_budget=96, alpha=1.5, explain=True)
+        print("-- planned_search (auto routing)")
+        print(format_reports(res.reports))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,219 @@
+#!/usr/bin/env python
+"""Benchmark regression gate over the committed BENCH_*.json artifacts.
+
+Each growth PR commits headline benchmark artifacts at the repo root. This
+script keeps them honest in both directions:
+
+  * **structural**: the committed artifact (and a fresh one, when present)
+    must still contain its headline metric and every required boolean must
+    be true — an artifact that silently lost its acceptance flags is
+    treated as a failure, not a shrug;
+  * **regression**: when a fresh artifact was produced under the *same
+    protocol scale* as the committed one (same corpus / request counts /
+    quick flag), the headline metric may not regress by more than
+    --threshold (default 15%). Quick-mode runs never match the committed
+    full-scale protocol, so CI's `--run --quick` sweep exercises every
+    bench end to end and structurally checks its output without timing
+    noise failing the build.
+
+Usage:
+    scripts/bench_check.py                      # check committed artifacts
+    scripts/bench_check.py --run --quick        # fresh quick run + check
+    scripts/bench_check.py --fresh-dir DIR      # compare pre-built fresh set
+    scripts/bench_check.py serve persistent     # subset
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+ROOT = os.path.normpath(os.path.join(os.path.dirname(__file__), ".."))
+
+#: per-artifact contract: where the headline lives ("dotted.path", better
+#: direction), which booleans must hold, and which protocol keys define the
+#: scale (regression comparison requires them all equal)
+SPECS = {
+    "serve": dict(
+        module="benchmarks.serve_bench",
+        headline=("speedup.p99", "higher"),
+        booleans=("results_bit_identical",),
+        protocol="protocol",
+        scale_keys=("requests", "corpus", "lane_width", "probe_budget",
+                    "load", "queue_size"),
+    ),
+    "persistent": dict(
+        module="benchmarks.persistent_bench",
+        headline=("throughput.speedup", "higher"),
+        booleans=("throughput.topk_identical",),
+        protocol="config",
+        scale_keys=("n", "dim", "degree", "batch", "queue",
+                    "steps_per_launch", "quick"),
+    ),
+    "planner": dict(
+        module="benchmarks.planner_bench",
+        headline=("checks.selective_speedup_vs_traverse", "higher"),
+        booleans=("checks.within_5pct_of_best_single",
+                  "checks.selective_bar_ok"),
+        protocol="protocol",
+        scale_keys=("corpus", "train_queries", "eval_queries",
+                    "probe_budget", "quick"),
+    ),
+    "quant": dict(
+        module="benchmarks.quant_bench",
+        headline=None,                      # acceptance booleans are the bar
+        booleans=("acceptance.pq_memory_reduction_ge_4x",
+                  "acceptance.ndc_throughput_gain",
+                  "acceptance.recall_within_0p01"),
+        protocol="protocol",
+        scale_keys=("corpus", "dim", "train_queries", "eval_queries",
+                    "quick"),
+    ),
+    "obs": dict(
+        module="benchmarks.obs_bench",
+        headline=("overhead.total_ratio", "lower"),
+        booleans=("results_bit_identical", "prometheus.valid"),
+        protocol="protocol",
+        scale_keys=("requests", "corpus", "lane_width", "probe_budget",
+                    "quick"),
+    ),
+}
+
+
+def _get(d: dict, dotted: str):
+    for part in dotted.split("."):
+        if not isinstance(d, dict) or part not in d:
+            return None
+        d = d[part]
+    return d
+
+
+def check_structure(name: str, spec: dict, doc: dict, label: str) -> list:
+    """Headline present + required booleans true. Returns failure strings."""
+    fails = []
+    if spec["headline"] is not None:
+        v = _get(doc, spec["headline"][0])
+        if not isinstance(v, (int, float)):
+            fails.append(f"{name}[{label}]: headline "
+                         f"{spec['headline'][0]} missing or non-numeric")
+    for b in spec["booleans"]:
+        if _get(doc, b) is not True:
+            fails.append(f"{name}[{label}]: required flag {b} is "
+                         f"{_get(doc, b)!r}, expected true")
+    return fails
+
+
+def compare(name: str, spec: dict, committed: dict, fresh: dict,
+            threshold: float) -> tuple[list, str]:
+    """Regression check; returns (failures, human summary line)."""
+    proto_c = committed.get(spec["protocol"], {})
+    proto_f = fresh.get(spec["protocol"], {})
+    mismatched = [k for k in spec["scale_keys"]
+                  if proto_c.get(k) != proto_f.get(k)]
+    if mismatched:
+        return [], (f"{name}: protocol scale differs on "
+                    f"{','.join(mismatched)} — structural checks only")
+    if spec["headline"] is None:
+        return [], f"{name}: protocol match; boolean acceptance only"
+    path, direction = spec["headline"]
+    old, new = _get(committed, path), _get(fresh, path)
+    if direction == "higher":
+        ok, bound = new >= old * (1 - threshold), old * (1 - threshold)
+    else:
+        ok, bound = new <= old * (1 + threshold), old * (1 + threshold)
+    line = (f"{name}: {path} committed={old:.4g} fresh={new:.4g} "
+            f"({direction} is better, gate at {bound:.4g})")
+    return ([] if ok else
+            [f"{name}: headline {path} regressed past {threshold:.0%}: "
+             f"committed {old:.4g} → fresh {new:.4g}"]), line
+
+
+def run_fresh(name: str, spec: dict, out_dir: str, quick: bool) -> str:
+    out = os.path.join(out_dir, f"BENCH_{name}.json")
+    cmd = [sys.executable, "-m", spec["module"], "--out", out]
+    if quick:
+        cmd.append("--quick")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    print(f"# running {' '.join(cmd[1:])}")
+    subprocess.run(cmd, cwd=ROOT, env=env, check=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("benches", nargs="*", default=[],
+                    help=f"subset of {sorted(SPECS)} (default: all with a "
+                         "committed artifact)")
+    ap.add_argument("--run", action="store_true",
+                    help="produce fresh artifacts by running each bench")
+    ap.add_argument("--quick", action="store_true",
+                    help="with --run: quick protocol (structural checks "
+                         "only — quick never scale-matches committed)")
+    ap.add_argument("--fresh-dir", default=None,
+                    help="directory holding freshly produced BENCH_*.json "
+                         "to compare against the committed set")
+    ap.add_argument("--threshold", type=float, default=0.15,
+                    help="max allowed headline regression (fraction)")
+    args = ap.parse_args()
+
+    names = args.benches or [n for n in SPECS
+                             if os.path.exists(
+                                 os.path.join(ROOT, f"BENCH_{n}.json"))
+                             or args.run]
+    unknown = [n for n in names if n not in SPECS]
+    if unknown:
+        raise SystemExit(f"unknown bench(es) {unknown}; known: "
+                         f"{sorted(SPECS)}")
+
+    tmp = None
+    fresh_dir = args.fresh_dir
+    if args.run:
+        tmp = tempfile.TemporaryDirectory(prefix="bench_check_")
+        fresh_dir = tmp.name
+
+    failures = []
+    for name in names:
+        spec = SPECS[name]
+        committed_path = os.path.join(ROOT, f"BENCH_{name}.json")
+        committed = (json.load(open(committed_path))
+                     if os.path.exists(committed_path) else None)
+        if committed is not None:
+            failures += check_structure(name, spec, committed, "committed")
+        if args.run:
+            run_fresh(name, spec, fresh_dir, args.quick)
+        fresh = None
+        if fresh_dir:
+            fp = os.path.join(fresh_dir, f"BENCH_{name}.json")
+            if os.path.exists(fp):
+                fresh = json.load(open(fp))
+        if fresh is not None:
+            failures += check_structure(name, spec, fresh, "fresh")
+            if committed is not None:
+                fails, line = compare(name, spec, committed, fresh,
+                                      args.threshold)
+                print(line)
+                failures += fails
+            else:
+                print(f"{name}: fresh artifact structurally ok "
+                      f"(no committed baseline yet)")
+        elif committed is None:
+            print(f"{name}: no committed or fresh artifact — skipped")
+        else:
+            print(f"{name}: committed artifact structurally ok "
+                  f"(no fresh run to compare)")
+
+    if failures:
+        print("\nBENCH CHECK FAILURES:")
+        for f in failures:
+            print(f"  - {f}")
+        raise SystemExit(1)
+    print("bench_check: all green")
+
+
+if __name__ == "__main__":
+    main()

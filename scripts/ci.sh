@@ -24,6 +24,7 @@ CHUNKS=(
   "tests/test_serve.py"
   "tests/test_planner.py"
   "tests/test_persistent.py"
+  "tests/test_obs.py"
   "tests/test_distributed.py"
   "tests/test_models_smoke.py tests/test_dryrun_small.py"
 )
@@ -38,10 +39,19 @@ done
 # Serving-path smoke: the launcher must stay runnable end to end (admission →
 # probe → bucket → resume → report), not just unit-tested. Shrunk bring-up
 # (corpus/training) — the serving path exercised is identical and the W_q
-# ground-truth labeling is the expensive part.
+# ground-truth labeling is the expensive part. --explain/--prometheus keep
+# the observability surfaces (lifecycle timelines, calibration report,
+# exposition scrape) runnable, not just unit-tested.
 echo "=== serve smoke ==="
 python -m repro.launch.serve --requests 8 --batch 4 \
-  --corpus 2000 --train-queries 64 || fail=1
+  --corpus 2000 --train-queries 64 --explain 2 --prometheus || fail=1
+
+# EXPLAIN smoke: the quickstart's per-query lifecycle reports across all
+# three backends (dense / pallas / pallas_persistent) plus planner routing.
+echo "=== quickstart --explain smoke ==="
+python examples/quickstart.py --explain --backend dense \
+  --corpus 2000 --train-queries 96 --eval-batch 16 --plan-queries 64 \
+  || fail=1
 
 # Filter-algebra smoke: composite (AND/OR/NOT) workloads end to end through
 # probe → estimate → resume, recall vs the brute-force pre-filter oracle.
@@ -49,24 +59,16 @@ python -m repro.launch.serve --requests 8 --batch 4 \
 echo "=== filter-algebra smoke ==="
 python -m benchmarks.filter_algebra --quick || fail=1
 
-# Quantized-index smoke: int8/PQ codecs end to end (memory, distance-stage
-# throughput, matched-budget recall + exact rerank). --quick shrinks the
-# world and does not overwrite BENCH_quant.json.
-echo "=== quant smoke ==="
-python -m benchmarks.quant_bench --quick || fail=1
-
-# Persistent-backend smoke: multi-step launch grouping + donation + lane
-# compaction end to end, parity-asserted against the single-step backend.
-# --quick shrinks the world and does not overwrite BENCH_persistent.json.
-echo "=== persistent smoke ==="
-python -m benchmarks.persistent_bench --quick || fail=1
-
-# Planner smoke: scan / widen / traverse + per-lane routing across a
-# selectivity sweep, recall vs the brute-force oracle and NDC vs the best
-# single plan. --quick shrinks the world and does not overwrite
-# BENCH_planner.json.
-echo "=== planner smoke ==="
-python -m benchmarks.planner_bench --quick || fail=1
+# Benchmark smoke + artifact gate: runs each headline bench (quant,
+# persistent, planner, serve, obs) at --quick scale into a temp dir, then
+# structurally validates both the fresh output and the committed BENCH_*.json
+# artifacts (headline metric present, acceptance booleans true). Quick runs
+# never scale-match the committed protocol, so no timing-noise regression
+# gating happens here — run `scripts/bench_check.py --run` at full scale
+# before refreshing a committed artifact.
+echo "=== bench smoke + artifact check ==="
+python scripts/bench_check.py --run --quick \
+  quant persistent planner serve obs || fail=1
 
 if [ "$fail" -ne 0 ]; then
   echo "CI: FAILURES (see chunks above)"

@@ -34,6 +34,7 @@ class E2EResult:
     state: SearchState
     predicted_budget: np.ndarray  # [B]
     probe_features: np.ndarray    # [B, F]
+    reports: list | None = None   # explain=True: [B] obs.QueryReport
 
 
 def probe_and_features(
@@ -44,6 +45,8 @@ def probe_and_features(
     probe_budget: int,
     n_probes: int = 2,
     gt_dist: np.ndarray | None = None,
+    tracer=None,
+    trace_id: str = "",
 ):
     """Run the early probe and extract trajectory features.
 
@@ -54,21 +57,47 @@ def probe_and_features(
     the probe phase; n_probes=1 reproduces the paper exactly. The probe
     remains zero-overhead: both snapshots are prefixes of the same
     traversal carry.
+
+    `tracer` wraps each probe dispatch in a "probe" span and the feature
+    extraction in a "feature-extract" span; both measure host dispatch
+    only (no reads of device values are added), so the state stream is
+    untouched with tracing on.
     """
     import jax.numpy as jnp
 
+    from repro.obs.trace import as_tracer
+
+    tr = as_tracer(tracer)
+    # budget may be scalar or per-lane [B] (the scheduler zeroes padding
+    # lanes); span attrs must be host scalars, so report the lane max
+    bud = (int(probe_budget) if np.ndim(probe_budget) == 0
+           else int(np.asarray(probe_budget).max(initial=0)))
     # compile once up front — engine.compile passes a FilterProgram through
     # untouched, so the per-phase engine.search calls skip the host-side
     # expression lowering (a Python loop over the batch for exprs)
     filt = engine.compile(filt)
     if n_probes <= 1:
-        state = engine.search(cfg, queries, filt, probe_budget, gt_dist=gt_dist)
-        return state, extract_features(state)
-    state = engine.search(cfg, queries, filt, probe_budget // 2, gt_dist=gt_dist)
+        with tr.span("probe", trace_id, budget=bud, snapshot=1,
+                     n_probes=1):
+            state = engine.search(cfg, queries, filt, probe_budget,
+                                  gt_dist=gt_dist, tracer=tracer,
+                                  trace_id=trace_id)
+        with tr.span("feature-extract", trace_id, n_probes=1):
+            z = extract_features(state)
+        return state, z
+    with tr.span("probe", trace_id, budget=bud // 2, snapshot=1,
+                 n_probes=int(n_probes)):
+        state = engine.search(cfg, queries, filt, probe_budget // 2,
+                              gt_dist=gt_dist, tracer=tracer,
+                              trace_id=trace_id)
     z1 = extract_features(state)
-    state = engine.search(cfg, queries, filt, probe_budget, state=state,
-                          gt_dist=gt_dist)
-    z2 = extract_features(state)
+    with tr.span("probe", trace_id, budget=bud, snapshot=2,
+                 n_probes=int(n_probes)):
+        state = engine.search(cfg, queries, filt, probe_budget, state=state,
+                              gt_dist=gt_dist, tracer=tracer,
+                              trace_id=trace_id)
+    with tr.span("feature-extract", trace_id, n_probes=int(n_probes)):
+        z2 = extract_features(state)
     return state, jnp.concatenate([z2, z2 - z1], axis=1)
 
 
@@ -110,45 +139,113 @@ def e2e_search(
     repredict_every: int = 0,
     max_repredict: int = 8,
     n_probes: int = 2,
+    tracer=None,
+    trace_id: str = "",
+    explain: bool = False,
 ) -> E2EResult:
+    """`tracer` emits lifecycle spans (probe / feature-extract / estimate /
+    resume / rerank) at the host dispatch boundaries that already exist —
+    results are bit-identical with tracing on vs. off. `explain=True`
+    additionally builds one `obs.QueryReport` per lane (features, Ŵ_q,
+    per-stage NDC + launch counts, termination reason) in
+    `E2EResult.reports`; this reads back per-stage counters on the host,
+    which explain mode accepts as its (post-search) cost."""
+    from repro.core.search import dispatch_counters
+    from repro.obs.trace import as_tracer
+
+    tr = as_tracer(tracer)
+    if tracer is not None and not trace_id:
+        trace_id = tr.new_trace("e2e")
+
     # --- stage 1: early probe (zero overhead — same traversal carry) ---
     filt = engine.compile(filt)  # once for probe + resume + repredict loops
+    d0 = dispatch_counters()
     state, feats = probe_and_features(engine, cfg, queries, filt, probe_budget,
-                                      n_probes)
+                                      n_probes, tracer=tracer,
+                                      trace_id=trace_id)
+    d1 = dispatch_counters()
+    probe_cnt = np.asarray(state.cnt).copy() if explain else None
 
     # --- stage 2: cost estimation ---
     packed = estimator.packed()
-    budgets, feats = predict_budgets(estimator, feats, alpha, min_budget,
-                                     max_budget, ablate_filter, packed=packed)
+    with tr.span("estimate", trace_id, alpha=float(alpha)):
+        budgets, feats = predict_budgets(estimator, feats, alpha, min_budget,
+                                         max_budget, ablate_filter,
+                                         packed=packed)
 
     # --- stage 3: adaptive termination (resume with predicted budget) ---
+    n_resume_calls = 0
     if repredict_every <= 0:
-        state = engine.search(cfg, queries, filt, budgets, state=state)
+        with tr.span("resume", trace_id):
+            state = engine.search(cfg, queries, filt, budgets, state=state,
+                                  tracer=tracer, trace_id=trace_id)
+        n_resume_calls = 1
     else:
         # DARTH-style stepwise: advance Δ NDCs, re-predict, stop when the
         # model says the spent budget suffices.
         import jax.numpy as jnp
 
         prev = extract_features(state)
-        for _ in range(max_repredict):
+        for rp in range(max_repredict):
             cur = np.asarray(state.cnt)
             tgt = np.asarray(budgets)
             if np.all(tgt <= cur):
                 break
             step_budget = np.minimum(tgt, cur + repredict_every)
-            state = engine.search(cfg, queries, filt, step_budget, state=state)
+            with tr.span("resume", trace_id, repredict=rp):
+                state = engine.search(cfg, queries, filt, step_budget,
+                                      state=state, tracer=tracer,
+                                      trace_id=trace_id)
+            n_resume_calls += 1
             znow = extract_features(state)
             f2 = jnp.concatenate([znow, znow - prev], axis=1) if n_probes > 1 else znow
             prev = znow
             if ablate_filter:
                 f2 = ablate_filter_features(f2)
             budgets = estimator.predict_budget_jax(packed, f2, alpha, min_budget, max_budget)
+    d2 = dispatch_counters()
 
     # --- stage 4 (quantized engines): terminal exact float32 rerank ---
-    state = engine.rerank(cfg, queries, state)
+    with tr.span("rerank", trace_id,
+                 precision=engine.effective_precision(cfg)):
+        state = engine.rerank(cfg, queries, state)
+
+    reports = None
+    if explain:
+        from repro.core.search import get_backend
+        from repro.obs.explain import StageReport, build_reports
+
+        final_cnt = np.asarray(state.cnt)
+        bud = np.asarray(budgets)
+        b = final_cnt.shape[0]
+        backend_name = cfg.backend or engine.backend or "dense"
+        if getattr(get_backend(backend_name), "persistent", False):
+            probe_l = d1["launches"] - d0["launches"]
+            resume_l = d2["launches"] - d1["launches"]
+        else:
+            # single-dispatch backends: one device dispatch per search call
+            probe_l = 1 if n_probes <= 1 else 2
+            resume_l = n_resume_calls
+        stages = [
+            [StageReport("probe", ndc=int(probe_cnt[i]), launches=probe_l,
+                         attrs=dict(budget=int(probe_budget),
+                                    n_probes=int(n_probes))),
+             StageReport("estimate", attrs=dict(alpha=float(alpha))),
+             StageReport("resume", ndc=int(final_cnt[i] - probe_cnt[i]),
+                         launches=resume_l),
+             StageReport("rerank", attrs=dict(
+                 precision=engine.effective_precision(cfg)))]
+            for i in range(b)
+        ]
+        reports = build_reports(
+            cfg, state, bud, backend=backend_name,
+            probe_ndc=probe_cnt, features=np.asarray(feats),
+            trace_ids=[f"{trace_id or 'e2e'}:{i}" for i in range(b)],
+            stages=stages)
 
     return E2EResult(
         state=state,
         predicted_budget=np.asarray(budgets),
         probe_features=np.asarray(feats),
+        reports=reports,
     )

@@ -203,6 +203,8 @@ class SearchEngine:
         budgets,                      # scalar or [B]
         state: SearchState | None = None,
         gt_dist: np.ndarray | None = None,
+        tracer=None,                  # obs.Tracer | None — persistent driver
+        trace_id: str = "",           # spans only; never enters traced code
     ) -> SearchState:
         cfg = dataclasses.replace(cfg, degree=int(self.neighbors.shape[1]))
         if cfg.backend is None:
@@ -234,7 +236,7 @@ class SearchEngine:
                 return run_search_persistent(
                     cfg, q, prog, self.base_vectors, attrs, self.neighbors,
                     budgets, self.entry_point, state=state, gt_dist=gt,
-                    quant=quant,
+                    quant=quant, tracer=tracer, trace_id=trace_id,
                 )
             return run_search(
                 cfg, q, prog, self.base_vectors, attrs, self.neighbors,

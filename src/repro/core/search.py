@@ -186,6 +186,24 @@ run_search = functools.partial(
 # --------------------------------------------------------------------------
 # persistent execution: multi-step launches + eager active-lane compaction
 # --------------------------------------------------------------------------
+
+# Driver-observed dispatch accounting. `_persistent_launch` is the only
+# device dispatch the persistent driver makes, so counting calls here is
+# ground truth for "how many launches did this search actually cost" — the
+# quantity the serving metrics report (a ⌈steps/spl⌉ estimate undercounts:
+# probe phases dispatch once per snapshot, and compaction relaunches split
+# what a step count would merge). Lifetime counters, read via deltas.
+_DISPATCH_COUNTERS = {"launches": 0, "compactions": 0, "steps": 0}
+
+
+def dispatch_counters() -> dict:
+    """Snapshot of lifetime persistent-driver dispatch counters:
+    `launches` (device dispatches), `compactions` (launches at reduced
+    lane width), `steps` (lockstep trips actually advanced). Callers
+    measure work by differencing two snapshots."""
+    return dict(_DISPATCH_COUNTERS)
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("cfg", "entry_point", "mode", "use_kernel"),
@@ -257,6 +275,8 @@ def run_search_persistent(
     state: SearchState | None = None,
     gt_dist: jax.Array | None = None,
     quant=None,
+    tracer=None,
+    trace_id: str = "",
 ) -> SearchState:
     """Eager launch-loop driver for persistent backends (single device).
 
@@ -276,7 +296,16 @@ def run_search_persistent(
     identical deterministic trajectories, and scatter back identical values.
 
     `state`, when passed, is donated (same contract as `run_search`).
+
+    `tracer`/`trace_id` emit one span per launch (width, mode, steps
+    advanced) and one instant event per compaction. Spans wrap only the
+    dispatch + the `hops` readback the driver performs anyway — tracing
+    adds no device synchronization and the state stream is untouched, so
+    results are bit-identical with tracing on or off.
     """
+    from repro.obs.trace import as_tracer
+
+    tr = as_tracer(tracer)
     qprep = _make_qprep(cfg, queries, quant)
     b = int(queries.shape[0])
     budgets = jnp.broadcast_to(jnp.asarray(budgets, jnp.int32), (b,))
@@ -291,12 +320,16 @@ def run_search_persistent(
 
     mode = "init" if state is None else "resume"
     hops0 = 0 if state is None else np.asarray(state.hops)
-    state = _persistent_launch(
-        cfg, queries, prog, base_vectors, attrs, neighbors, budgets,
-        entry_point, state, gt_dist, quant, qprep,
-        jnp.int32(cfg.max_steps), rows, aux, mode=mode,
-        use_kernel=use_kernel)
-    it = int((np.asarray(state.hops) - hops0).max(initial=0))
+    with tr.span("launch", trace_id, mode=mode, width=b) as sp:
+        state = _persistent_launch(
+            cfg, queries, prog, base_vectors, attrs, neighbors, budgets,
+            entry_point, state, gt_dist, quant, qprep,
+            jnp.int32(cfg.max_steps), rows, aux, mode=mode,
+            use_kernel=use_kernel)
+        it = int((np.asarray(state.hops) - hops0).max(initial=0))
+        sp.set(steps=it)
+    _DISPATCH_COUNTERS["launches"] += 1
+    _DISPATCH_COUNTERS["steps"] += it
 
     min_w = min(8, b)  # ladder floor bounds the retrace count to O(log B)
     while it < cfg.max_steps:
@@ -307,22 +340,37 @@ def run_search_persistent(
         rem = jnp.int32(cfg.max_steps - it)
         if w == b:  # no compaction win — relaunch at full width
             hops0 = np.asarray(state.hops)
-            state = _persistent_launch(
-                cfg, queries, prog, base_vectors, attrs, neighbors, budgets,
-                entry_point, state, gt_dist, quant, qprep, rem, rows, aux,
-                mode="cont", use_kernel=use_kernel)
-            it += int((np.asarray(state.hops) - hops0).max(initial=0))
+            with tr.span("launch", trace_id, mode="cont", width=b,
+                         active=int(sel.size)) as sp:
+                state = _persistent_launch(
+                    cfg, queries, prog, base_vectors, attrs, neighbors,
+                    budgets, entry_point, state, gt_dist, quant, qprep, rem,
+                    rows, aux, mode="cont", use_kernel=use_kernel)
+                d = int((np.asarray(state.hops) - hops0).max(initial=0))
+                sp.set(steps=d)
+            it += d
+            _DISPATCH_COUNTERS["launches"] += 1
+            _DISPATCH_COUNTERS["steps"] += d
             continue
         pad = w - int(sel.size)
+        tr.emit("compact", trace_id, from_width=b, to_width=w,
+                active=int(sel.size), pad=pad)
         sel_p = (np.concatenate([sel, np.full(pad, sel[0], sel.dtype)])
                  if pad else sel)
         sub_state, sub_q, sub_prog, sub_bud, sub_gt, sub_qp = take_lanes(
             (state, queries, prog, budgets, gt_dist, qprep), sel_p)
         hops0 = np.asarray(sub_state.hops)
-        out = _persistent_launch(
-            cfg, sub_q, sub_prog, base_vectors, attrs, neighbors, sub_bud,
-            entry_point, sub_state, sub_gt, quant, sub_qp, rem, rows, aux,
-            mode="cont", use_kernel=use_kernel)
-        it += int((np.asarray(out.hops) - hops0).max(initial=0))
+        with tr.span("launch", trace_id, mode="cont", width=w,
+                     active=int(sel.size), compacted=True) as sp:
+            out = _persistent_launch(
+                cfg, sub_q, sub_prog, base_vectors, attrs, neighbors,
+                sub_bud, entry_point, sub_state, sub_gt, quant, sub_qp, rem,
+                rows, aux, mode="cont", use_kernel=use_kernel)
+            d = int((np.asarray(out.hops) - hops0).max(initial=0))
+            sp.set(steps=d)
+        it += d
+        _DISPATCH_COUNTERS["launches"] += 1
+        _DISPATCH_COUNTERS["compactions"] += 1
+        _DISPATCH_COUNTERS["steps"] += d
         state = put_lanes(state, out, sel_p)
     return state

@@ -109,8 +109,18 @@ def main():
                     choices=["float32", "int8", "pq"],
                     help="engine vector-store precision: compressed-domain "
                          "traversal + exact float32 rerank on completion")
+    ap.add_argument("--explain", type=int, default=0, metavar="N",
+                    help="trace request lifecycles and print the first N "
+                         "served timelines (admit → probe → resume slices "
+                         "→ complete)")
+    ap.add_argument("--trace-out", default=None,
+                    help="stream lifecycle spans to this JSONL file")
+    ap.add_argument("--prometheus", action="store_true",
+                    help="print a Prometheus text-format scrape (serving + "
+                         "calibration metrics) after the run")
     args = ap.parse_args()
 
+    from repro.obs import Tracer
     from repro.serve import CostAwareScheduler, ServeConfig
 
     print("== index + estimator bring-up")
@@ -133,12 +143,17 @@ def main():
     scfg = ServeConfig(lane_width=args.batch, buckets=buckets,
                        policy=args.policy, probe_budget=args.probe,
                        alpha=args.alpha, queue_capacity=capacity)
-    sched = CostAwareScheduler(engine, est, cfg, scfg)
+    t0 = time.perf_counter()
+    # the tracer shares the launcher's relative clock, so span timestamps
+    # line up with request arrival/completion times in the timelines below
+    tracer = (Tracer(clock=lambda: time.perf_counter() - t0,
+                     sink=args.trace_out)
+              if (args.explain or args.trace_out) else None)
+    sched = CostAwareScheduler(engine, est, cfg, scfg, tracer=tracer)
 
     print(f"== serving {args.requests} mixed contain/range requests "
           f"(lanes={args.batch}, buckets={buckets}, policy={args.policy})")
     reqs = mixed_requests(ds, args.requests)
-    t0 = time.perf_counter()
     for r in reqs:
         sched.submit(r, time.perf_counter() - t0)
     sched.run_until_idle(time.perf_counter() - t0)
@@ -152,7 +167,37 @@ def main():
     print(f"batches={s['n_batches']} requeues={s['n_requeues']} "
           f"shed={s['n_shed']} cache_hit_rate="
           f"{s['cache']['hit_rate']:.2f} queue_depth_max="
-          f"{s['queue_depth_max']}")
+          f"{s['queue_depth_max']} launches={s['launches_total']}")
+
+    rep = sched.calibration_report()
+    if rep and rep["n_records"]:
+        plans = " ".join(f"{k}:{v['n']}(win={v['win_rate']:.2f})"
+                         for k, v in rep["per_plan"].items())
+        print(f"calibration: n={rep['n_records']} "
+              f"log_rmse={rep['log_rmse']:.3f} over/under="
+              f"{rep['overprediction_rate']:.2f}/"
+              f"{rep['underprediction_rate']:.2f}  {plans}")
+
+    if args.explain:
+        print(f"== lifecycle timelines (first {args.explain} requests)")
+        for r in reqs[: args.explain]:
+            print(f"request {r.rid} [{r.trace_id}] "
+                  f"plan={r.plan or 'traverse'} budget={r.budget} "
+                  f"ndc={r.ndc} probe_ndc={r.probe_ndc} "
+                  f"slices={r.n_slices} cache_hit={r.cache_hit}")
+            for sp in tracer.spans(trace_id=r.trace_id):
+                extras = "".join(f"  {k}={v}" for k, v in sp.attrs.items()
+                                 if k != "rid")
+                t = (f" (+{1e3 * sp.duration:.1f}ms)"
+                     if sp.duration > 0 else "")
+                print(f"  {1e3 * (sp.t0 - (r.arrival or 0.0)):8.1f}ms "
+                      f"{sp.name}{t}{extras}")
+    if tracer is not None:
+        tracer.close()
+
+    if args.prometheus:
+        print("== prometheus scrape")
+        print(sched.prometheus(), end="")
 
     if args.gen_len > 0:
         _generate(args, reqs)

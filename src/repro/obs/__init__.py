@@ -1,0 +1,29 @@
+"""Observability: lifecycle tracing, calibration telemetry, export, EXPLAIN.
+
+Four pieces, all strictly outside the jitted hot path:
+
+  trace        `Tracer` — trace IDs + spans at host dispatch boundaries
+               (bounded ring, optional JSONL sink); `NO_TRACE` no-op.
+  calibration  `CalibrationMonitor` — the frozen per-query
+               (features, Ŵ_q, actual NDC, plan, recall) log the online
+               recalibration work trains from.
+  export       `prometheus_text` / `validate_prometheus` — exposition-
+               format scrape over ServeMetrics + calibration reports.
+  explain      `QueryReport` / `termination_reasons` — per-query EXPLAIN
+               surface for `e2e_search` / `planned_search`.
+"""
+from repro.obs.calibration import (PLAN_NAMES, RECORD_FIELDS, SCHEMA_VERSION,
+                                   CalibrationMonitor)
+from repro.obs.explain import (QueryReport, StageReport, build_reports,
+                               feature_dict, format_reports,
+                               termination_reasons)
+from repro.obs.export import prometheus_text, validate_prometheus
+from repro.obs.trace import (NO_TRACE, NullTracer, Span, Tracer, as_tracer)
+
+__all__ = [
+    "CalibrationMonitor", "PLAN_NAMES", "RECORD_FIELDS", "SCHEMA_VERSION",
+    "QueryReport", "StageReport", "build_reports", "feature_dict",
+    "format_reports", "termination_reasons",
+    "prometheus_text", "validate_prometheus",
+    "NO_TRACE", "NullTracer", "Span", "Tracer", "as_tracer",
+]

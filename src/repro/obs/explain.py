@@ -1,0 +1,203 @@
+"""EXPLAIN: per-query lifecycle reports for `e2e_search`/`planned_search`.
+
+The paper's cost model reasons in per-query quantities — probe features
+z_q, predicted budget Ŵ_q = α·exp(M(z_q)), actual NDC W_q — but the search
+APIs return only the final `SearchState`. `explain=True` additionally
+returns one `QueryReport` per lane: the features the prediction was made
+from, the predicted cost, the plan the router chose, per-stage NDC and
+launch counts, and *why* the traversal stopped.
+
+Termination-reason semantics (derived from the final carry, priority
+order — a lane can satisfy several conditions; we report the one the step
+function would act on first):
+
+  queue-drained  no unexpanded finite candidate remains — the valid
+                 sub-graph reachable from the entry was exhausted before
+                 the budget; the estimator's prediction was irrelevant.
+  budget         cnt ≥ budget — the paper's adaptive termination fired;
+                 the predicted Ŵ_q is what stopped the search.
+  greedy         (cfg.greedy_stop only) best remaining candidate is worse
+                 than the current k-th result — classic HNSW convergence.
+  active         none of the above: the lane was still runnable when the
+                 driver stopped stepping (max_steps, or an external pause).
+
+Everything here is host-side post-processing of arrays the caller already
+synchronized — building reports adds no device work to any search path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import numpy as np
+
+from repro.core.features import FEATURE_NAMES
+from repro.core.state import SearchConfig, SearchState
+
+TERM_QUEUE_DRAINED = "queue-drained"
+TERM_BUDGET = "budget"
+TERM_GREEDY = "greedy"
+TERM_ACTIVE = "active"
+
+
+def termination_reasons(cfg: SearchConfig, state: SearchState,
+                        budgets) -> list[str]:
+    """Per-lane stop reason from the final carry (see module docstring for
+    the priority order). `budgets` is scalar or [B]."""
+    cand_dist = np.asarray(state.cand_dist)
+    cand_idx = np.asarray(state.cand_idx)
+    cand_exp = np.asarray(state.cand_exp)
+    res_dist = np.asarray(state.res_dist)
+    cnt = np.asarray(state.cnt)
+    b = cnt.shape[0]
+    budgets = np.broadcast_to(np.asarray(budgets), (b,))
+
+    unexp = (~cand_exp) & (cand_idx >= 0) & np.isfinite(cand_dist)
+    has_cand = unexp.any(axis=1)
+    best_d = np.where(unexp, cand_dist, np.inf).min(axis=1)
+    over_budget = cnt >= budgets
+    worst_res = res_dist[:, -1]
+    greedy = (bool(cfg.greedy_stop) & np.isfinite(worst_res)
+              & np.isfinite(best_d) & (best_d > worst_res))
+
+    out = []
+    for i in range(b):
+        if not has_cand[i]:
+            out.append(TERM_QUEUE_DRAINED)
+        elif over_budget[i]:
+            out.append(TERM_BUDGET)
+        elif greedy[i]:
+            out.append(TERM_GREEDY)
+        else:
+            out.append(TERM_ACTIVE)
+    return out
+
+
+def feature_dict(feats: np.ndarray) -> dict:
+    """Name one lane's probe feature vector. Width F = n_probes×N_FEATURES:
+    the first block is z_f (names from FEATURE_NAMES); with n_probes=2 the
+    second block is the convergence-speed delta z_f − z_{f/2} (d_*)."""
+    feats = np.asarray(feats).ravel()
+    n = len(FEATURE_NAMES)
+    out = {}
+    for i, v in enumerate(feats):
+        if i < n:
+            out[FEATURE_NAMES[i]] = float(v)
+        elif i < 2 * n:
+            out[f"d_{FEATURE_NAMES[i - n]}"] = float(v)
+        else:
+            out[f"f{i}"] = float(v)
+    return out
+
+
+@dataclasses.dataclass
+class StageReport:
+    """One lifecycle stage of one query's execution.
+
+    `ndc` is the NDC *delta* spent inside the stage (state.cnt is
+    cumulative; stages partition it). `launches` is driver-observed device
+    dispatches attributable to the stage's batch — a batch-level quantity
+    (lanes in a lockstep batch share dispatches), reported per query so a
+    report is self-contained."""
+
+    name: str
+    ndc: int = 0
+    launches: int = 0
+    duration: float = 0.0
+    attrs: dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class QueryReport:
+    """The complete EXPLAIN record for one query."""
+
+    trace_id: str
+    backend: str
+    plan: str                     # "traverse" | "scan" | "widen"
+    predicted_budget: int         # Ŵ_q (scan lanes: closed-form σ·N·c)
+    actual_ndc: int               # W_q actually spent (state.cnt)
+    probe_ndc: int                # NDC of the probe prefix (0 if no probe)
+    termination: str              # see termination_reasons
+    k_found: int                  # valid results delivered (≤ k)
+    hops: int                     # expansions performed
+    features: dict = dataclasses.field(default_factory=dict)
+    stages: list[StageReport] = dataclasses.field(default_factory=list)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        return d
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), sort_keys=True)
+
+    def format(self, features: bool = False) -> str:
+        """Human-readable lifecycle, one query."""
+        ratio = self.predicted_budget / max(self.actual_ndc, 1)
+        lines = [
+            f"query {self.trace_id or '?'} [{self.backend}] "
+            f"plan={self.plan} terminated={self.termination}",
+            f"  predicted Ŵ_q={self.predicted_budget}  "
+            f"actual NDC={self.actual_ndc}  (pred/actual={ratio:.2f})  "
+            f"probe={self.probe_ndc}  hops={self.hops}  "
+            f"k_found={self.k_found}",
+        ]
+        for st in self.stages:
+            extras = "".join(f"  {k}={v}" for k, v in st.attrs.items())
+            t = (f" t={st.duration * 1e3:8.3f}ms" if st.duration > 0 else "")
+            lines.append(
+                f"    {st.name:<12} ndc=+{st.ndc:<8} "
+                f"launches={st.launches:<4}{t}{extras}")
+        if features and self.features:
+            top = sorted(self.features.items(),
+                         key=lambda kv: -abs(kv[1]))[:8]
+            lines.append("    features     " + "  ".join(
+                f"{k}={v:.3g}" for k, v in top))
+        return "\n".join(lines)
+
+
+def format_reports(reports: list[QueryReport],
+                   features: bool = False) -> str:
+    return "\n".join(r.format(features=features) for r in reports)
+
+
+def build_reports(
+    cfg: SearchConfig,
+    state: SearchState,
+    budgets,
+    *,
+    backend: str = "",
+    plans=None,                    # [B] plan names, or None → "traverse"
+    probe_ndc=None,                # [B] NDC after the probe prefix
+    features=None,                 # [B, F] probe feature matrix
+    trace_ids=None,                # [B] trace ids
+    stages=None,                   # [B] list of per-lane StageReport lists
+) -> list[QueryReport]:
+    """Assemble per-lane reports from the final carry + pipeline context.
+
+    All array arguments are host arrays the pipeline already materialized
+    (predicted budgets, probe counters) — this never triggers a sync the
+    caller didn't pay anyway."""
+    cnt = np.asarray(state.cnt)
+    hops = np.asarray(state.hops)
+    res_idx = np.asarray(state.res_idx)
+    b = cnt.shape[0]
+    budgets = np.broadcast_to(np.asarray(budgets), (b,))
+    terms = termination_reasons(cfg, state, budgets)
+    probe_ndc = (np.zeros(b, np.int64) if probe_ndc is None
+                 else np.asarray(probe_ndc))
+    reports = []
+    for i in range(b):
+        reports.append(QueryReport(
+            trace_id="" if trace_ids is None else str(trace_ids[i]),
+            backend=backend,
+            plan="traverse" if plans is None else str(plans[i]),
+            predicted_budget=int(budgets[i]),
+            actual_ndc=int(cnt[i]),
+            probe_ndc=int(probe_ndc[i]),
+            termination=terms[i],
+            k_found=int((res_idx[i] >= 0).sum()),
+            hops=int(hops[i]),
+            features={} if features is None else feature_dict(features[i]),
+            stages=[] if stages is None else list(stages[i]),
+        ))
+    return reports

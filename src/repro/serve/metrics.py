@@ -69,9 +69,15 @@ class ServeMetrics:
 
     # ------------------------------------------------------------ summary ----
     def _percentiles(self, values, qs=(50, 95, 99)) -> dict:
-        if not len(values):
+        """Percentiles that are finite for any window: empty → 0.0, and
+        non-finite observations (a NaN latency from a mis-stamped clock
+        must not poison the whole scrape) are dropped first. Singleton
+        windows return that single value at every quantile."""
+        v = np.asarray(values, np.float64)
+        v = v[np.isfinite(v)]
+        if v.size == 0:
             return {f"p{q}": 0.0 for q in qs}
-        return {f"p{q}": float(np.percentile(values, q)) for q in qs}
+        return {f"p{q}": float(np.percentile(v, q)) for q in qs}
 
     def summary(self, n_shed: int = 0, n_expired: int = 0,
                 cache=None) -> dict:
@@ -86,22 +92,39 @@ class ServeMetrics:
         by_phase = {}
         for b in self.batches:
             d = by_phase.setdefault(b["phase"],
-                                    dict(n=0, busy=0.0, size=0,
-                                         launches=0, early=0.0))
-            d["n"] += 1
+                                    dict(n=0, busy=0.0, size=0, lanes=0,
+                                         steps=0, launches=0, early_w=0.0))
+            lanes = b["size"]  # real lanes; "lanes" in the record is the
+            d["n"] += 1        # padded dispatch width
             d["busy"] += b["busy"]
             d["size"] += b["size"]
+            d["lanes"] += lanes
+            d["steps"] += b.get("steps", 0)
             d["launches"] += b.get("launches", 0)
-            d["early"] += b.get("early_exit", 0.0)
+            # weight each batch's early-exit fraction by its real lane
+            # count: an unweighted per-batch mean lets a 1-lane tail batch
+            # count as much as a full 64-lane one, overstating (or
+            # understating) how many lanes actually exited early
+            d["early_w"] += b.get("early_exit", 0.0) * lanes
+        launches_total = steps_total = lanes_total = 0
+        early_w_total = 0.0
         for d in by_phase.values():
+            launches_total += d["launches"]
+            steps_total += d["steps"]
+            lanes_total += d["lanes"]
+            early_w_total += d["early_w"]
             d["mean_fill"] = d.pop("size") / d["n"]
             d["busy"] = round(d["busy"], 4)
-            d["early_exit_frac"] = round(d.pop("early") / d["n"], 4)
+            d["early_exit_frac"] = round(
+                d.pop("early_w") / max(d.pop("lanes"), 1), 4)
         out = dict(
             n_completed=self.n_completed,
             n_batches=self.n_batches,
             busy_time=float(self.busy_time),
             batches_by_phase=by_phase,
+            launches_total=int(launches_total),
+            steps_total=int(steps_total),
+            early_exit_frac=round(early_w_total / max(lanes_total, 1), 4),
             latency=self._percentiles(lat),
             latency_mean=float(lat.mean()) if len(lat) else 0.0,
             probe_latency=self._percentiles(plat),

@@ -67,6 +67,11 @@ class Request:
     probe_done: float | None = None
     completed: float | None = None
     cache_hit: bool = False
+    trace_id: str = ""                # obs lifecycle trace id (stamped at
+                                      # submit when the scheduler traces)
+    features: np.ndarray | None = None  # [F] probe feature vector the budget
+                                      # prediction was made from (calibration)
+    probe_ndc: int = 0                # NDC spent by the probe prefix
     res_idx: np.ndarray | None = None  # [k] final top-k ids
     res_dist: np.ndarray | None = None
     ndc: int | None = None

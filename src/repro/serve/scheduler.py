@@ -85,7 +85,8 @@ class ServeConfig:
 class CostAwareScheduler:
     def __init__(self, engine: SearchEngine, estimator, cfg: SearchConfig,
                  serve_cfg: ServeConfig = ServeConfig(),
-                 timer=time.perf_counter, service_model=None, planner=None):
+                 timer=time.perf_counter, service_model=None, planner=None,
+                 tracer=None, calibration: bool = True):
         """service_model: optional callable (trip count, lane width) →
         seconds. When set, pump() charges batches by the model instead of
         the wall clock — a calibrated virtual clock that makes scheduling
@@ -98,7 +99,19 @@ class CostAwareScheduler:
         planner: a fitted `core.planner.Planner`; required when
         serve_cfg.plan is "auto" or "widen" (those route on its cost
         heads), ignored for "traverse" (the legacy `estimator` head) and
-        "scan" (closed-form)."""
+        "scan" (closed-form).
+
+        tracer: optional `obs.Tracer`. Requests get trace ids at submit;
+        spans cover admit → probe → estimate → plan-select → resume
+        slices (per-launch spans from the persistent driver) → complete.
+        Spans wrap only host dispatch boundaries that already exist, so
+        results are bit-identical with tracing on vs. off.
+
+        calibration: record (features, predicted Ŵ_q, actual NDC, plan)
+        per completed non-cache-hit request into `self.calibration` (a
+        `obs.CalibrationMonitor`) — the log online recalibration trains
+        from. Costs one feature-matrix device→host copy per probe batch,
+        outside every launch loop."""
         if serve_cfg.policy not in ("direct", "escalate"):
             raise ValueError(f"unknown policy {serve_cfg.policy!r}")
         if serve_cfg.plan not in PLANS + ("auto",):
@@ -139,24 +152,47 @@ class CostAwareScheduler:
         self._codec = engine.codec_key(cfg)
         self._rerank = engine.effective_precision(cfg) != "float32"
         from repro.core.search import get_backend
+        from repro.obs.calibration import CalibrationMonitor
+        from repro.obs.trace import as_tracer
         self._persistent = getattr(
             get_backend(cfg.backend or engine.backend or "dense"),
             "persistent", False)
+        self.tracer = tracer
+        self._tr = as_tracer(tracer)
+        self.calibration = CalibrationMonitor() if calibration else None
 
-    def _launch_stats(self, steps: int, lane_steps) -> tuple[int, float]:
-        """Dispatch accounting for one lockstep batch: a persistent backend
-        amortizes `steps` trips into ⌈steps / steps_per_launch⌉ device
-        launches (single-step backends pay one launch per trip), and
-        `early_exit_frac` is the fraction of real lanes that finished before
-        the batch's slowest — the lanes the in-launch early exit stops
-        paying for."""
-        if steps <= 0:
+    def _launches0(self) -> int:
+        """Persistent-driver dispatch counter snapshot (pump sites diff two
+        snapshots around their engine work to get driver-observed launch
+        counts; 0-cost for non-persistent backends, which never touch the
+        counter)."""
+        from repro.core.search import dispatch_counters
+
+        return dispatch_counters()["launches"]
+
+    def _launch_stats(self, steps: int, lane_steps,
+                      observed: int | None = None) -> tuple[int, float]:
+        """Dispatch accounting for one lockstep batch. On a persistent
+        backend `observed` (a driver dispatch-counter delta around this
+        batch's engine work) is ground truth — the old ⌈steps /
+        steps_per_launch⌉ estimate undercounts because a probe dispatches
+        once per snapshot (n_probes launches minimum) and the compaction
+        ladder relaunches at reduced widths. Single-step backends pay one
+        launch per trip. `early_exit_frac` is the fraction of real lanes
+        that finished before the batch's slowest — the lanes the in-launch
+        early exit stops paying for."""
+        if self._persistent and observed is not None:
+            launches = int(observed)
+            if launches == 0 and steps <= 0:
+                return 0, 0.0
+        elif steps <= 0:
             return 0, 0.0
-        spl = max(1, self.cfg.steps_per_launch)
-        launches = -(-steps // spl) if self._persistent else steps
+        else:
+            spl = max(1, self.cfg.steps_per_launch)
+            launches = -(-steps // spl) if self._persistent else steps
         lane_steps = np.asarray(lane_steps)
         early = (float(np.mean(lane_steps < steps))
-                 if lane_steps.size else 0.0)
+                 if lane_steps.size and steps > 0 else 0.0)
         return launches, early
 
     # ------------------------------------------------------------- ingress ----
@@ -178,6 +214,8 @@ class CostAwareScheduler:
     def submit(self, req: Request, now: float) -> str:
         """Returns "hit" | "queued" | "shed" | "expired"."""
         req.arrival = now if req.arrival is None else req.arrival
+        if self.tracer is not None and not req.trace_id:
+            req.trace_id = self._tr.new_trace("req")
         if self.cache is not None:
             # keyed on the canonical expression, so hits never pay compile
             hit = self.cache.get(self._key(req))
@@ -185,6 +223,8 @@ class CostAwareScheduler:
                 req.res_idx, req.res_dist, req.ndc = hit
                 req.cache_hit = True
                 req.completed = now
+                self._tr.emit("complete", req.trace_id, rid=req.rid,
+                              cache_hit=True, ndc=int(req.ndc))
                 self.metrics.complete(req)
                 return "hit"
         if req.program is None and len(self.ingress) < self.ingress.capacity:
@@ -201,8 +241,11 @@ class CostAwareScheduler:
             req.program = compile_query(req.get_expr(), self.engine.n_words,
                                         self.engine.n_values)
         if not self.ingress.offer(req, now):
-            return "expired" if (req.deadline is not None
-                                 and now > req.deadline) else "shed"
+            status = ("expired" if (req.deadline is not None
+                                    and now > req.deadline) else "shed")
+            self._tr.emit("admit", req.trace_id, rid=req.rid, status=status)
+            return status
+        self._tr.emit("admit", req.trace_id, rid=req.rid, status="queued")
         return "queued"
 
     def has_work(self) -> bool:
@@ -307,6 +350,8 @@ class CostAwareScheduler:
             return self._pump_auto(now, reqs)
         cfg = self.cfg  # one static config serves every filter structure
         t0 = self.timer()
+        bt = self._tr.new_trace("probe") if self.tracer is not None else ""
+        l0 = self._launches0()
         width = self.batcher.width_for(len(reqs))
         queries = self.batcher.pad_queries(reqs, width)
         prog = self.batcher.pad_program(reqs, width)
@@ -321,7 +366,8 @@ class CostAwareScheduler:
         # run_plan("widen"), widens only the resume.
         st, feats = probe_and_features(
             self.engine, cfg, queries, prog,
-            jnp.asarray(lane_on * scfg.probe_budget), n_probes=scfg.n_probes)
+            jnp.asarray(lane_on * scfg.probe_budget), n_probes=scfg.n_probes,
+            tracer=self.tracer, trace_id=bt)
 
         # Stage 2 — cost estimate (same path as one-shot e2e_search /
         # run_plan): the legacy estimator for traverse, the planner's widen
@@ -329,10 +375,11 @@ class CostAwareScheduler:
         head, packed = ((self.estimator, self._packed)
                         if scfg.plan == "traverse"
                         else (self.planner.widen, self._packed_w))
-        budgets, _ = predict_budgets(head, feats, scfg.alpha,
-                                     scfg.min_budget, scfg.max_budget,
-                                     scfg.ablate_filter, packed=packed)
-        budgets = np.asarray(jax.block_until_ready(budgets))
+        with self._tr.span("estimate", bt, lanes=len(reqs)):
+            budgets, _ = predict_budgets(head, feats, scfg.alpha,
+                                         scfg.min_budget, scfg.max_budget,
+                                         scfg.ablate_filter, packed=packed)
+            budgets = np.asarray(jax.block_until_ready(budgets))
         cnt = np.asarray(st.cnt)
         res_idx, res_dist = self._final_results(
             queries, st,
@@ -341,9 +388,11 @@ class CostAwareScheduler:
         steps = int(np.asarray(st.hops).max())  # lockstep trip count
         busy = (self.timer() - t0 if self.service_model is None
                 else self.service_model(steps, width))
-        launches, early = self._launch_stats(steps, lane_hops)
+        launches, early = self._launch_stats(steps, lane_hops,
+                                             observed=self._launches0() - l0)
         self.metrics.observe_batch("probe", len(reqs), width, busy, steps,
                                    launches=launches, early_exit_frac=early)
+        feats_h = np.asarray(feats) if self.calibration is not None else None
 
         done = []
         for i, r in enumerate(reqs):
@@ -351,6 +400,12 @@ class CostAwareScheduler:
             r.budget = int(budgets[i])
             r.probe_done = now + busy
             r.executed = int(cnt[i])
+            r.probe_ndc = int(cnt[i])
+            if feats_h is not None:
+                r.features = feats_h[i]
+            self._tr.emit("probe-done", r.trace_id, rid=r.rid, batch=bt,
+                          budget=r.budget, probe_ndc=r.probe_ndc,
+                          plan=str(r.plan))
             if r.budget <= r.executed:
                 # the estimator says the probe already saw enough — the
                 # one-shot pipeline's resume would be a no-op for this lane
@@ -371,12 +426,15 @@ class CostAwareScheduler:
         is what extends the scheduled == one-shot bit-identity to auto."""
         scfg = self.scfg
         t0 = self.timer()
+        bt = self._tr.new_trace("auto") if self.tracer is not None else ""
         width = self.batcher.width_for(len(reqs))
         prog = self.batcher.pad_program(reqs, width)
-        stats = scan_stats(self.engine, prog)
-        s0 = np.asarray(stage0_scan_mask(
-            self.planner, stats, prog, scfg.alpha, scfg.min_budget,
-            scfg.max_budget, packed=self._packed_s))[: len(reqs)]
+        with self._tr.span("plan-stage0", bt, lanes=len(reqs)) as sp:
+            stats = scan_stats(self.engine, prog)
+            s0 = np.asarray(stage0_scan_mask(
+                self.planner, stats, prog, scfg.alpha, scfg.min_budget,
+                scfg.max_budget, packed=self._packed_s))[: len(reqs)]
+            sp.set(scan_routed=int(s0.sum()))
         busy = self.timer() - t0 if self.service_model is None else 0.0
         done = []
         scan_i = np.nonzero(s0)[0]
@@ -406,6 +464,8 @@ class CostAwareScheduler:
         scfg = self.scfg
         cfg = self.cfg
         t0 = self.timer()
+        bt = self._tr.new_trace("probe") if self.tracer is not None else ""
+        l0 = self._launches0()
         width = self.batcher.width_for(len(reqs))
         queries = self.batcher.pad_queries(reqs, width)
         prog = self.batcher.pad_program(reqs, width)
@@ -413,13 +473,16 @@ class CostAwareScheduler:
         lane_on[: len(reqs)] = 1
         st, feats = probe_and_features(
             self.engine, cfg, queries, prog,
-            jnp.asarray(lane_on * scfg.probe_budget), n_probes=scfg.n_probes)
+            jnp.asarray(lane_on * scfg.probe_budget), n_probes=scfg.n_probes,
+            tracer=self.tracer, trace_id=bt)
         cnt = np.asarray(st.cnt)
         counts = np.zeros(width, np.int64)
         counts[: len(reqs)] = stats.counts
-        ids, w_t, w_w = choose_plans(
-            self.planner, feats, cnt, counts, scfg.alpha, scfg.min_budget,
-            scfg.max_budget, packed_t=self._packed_t, packed_w=self._packed_w)
+        with self._tr.span("plan-select", bt, lanes=len(reqs)):
+            ids, w_t, w_w = choose_plans(
+                self.planner, feats, cnt, counts, scfg.alpha,
+                scfg.min_budget, scfg.max_budget, packed_t=self._packed_t,
+                packed_w=self._packed_w)
         fin = [i for i in range(len(reqs)) if ids[i] != PLAN_SCAN
                and int((w_t if ids[i] == PLAN_TRAVERSE else w_w)[i])
                <= int(cnt[i])]
@@ -428,9 +491,15 @@ class CostAwareScheduler:
         steps = int(np.asarray(st.hops).max())
         busy = (self.timer() - t0 if self.service_model is None
                 else self.service_model(steps, width))
-        launches, early = self._launch_stats(steps, lane_hops)
+        launches, early = self._launch_stats(steps, lane_hops,
+                                             observed=self._launches0() - l0)
         self.metrics.observe_batch("probe", len(reqs), width, busy, steps,
                                    launches=launches, early_exit_frac=early)
+        feats_h = np.asarray(feats) if self.calibration is not None else None
+        for i, r in enumerate(reqs):
+            r.probe_ndc = int(cnt[i])
+            if feats_h is not None:
+                r.features = feats_h[i]
 
         done = []
         late = [i for i in range(len(reqs)) if ids[i] == PLAN_SCAN]
@@ -453,6 +522,8 @@ class CostAwareScheduler:
             r.budget = int((w_t if ids[i] == PLAN_TRAVERSE else w_w)[i])
             r.probe_done = now + busy
             r.executed = int(cnt[i])
+            self._tr.emit("probe-done", r.trace_id, rid=r.rid, batch=bt,
+                          budget=r.budget, probe_ndc=r.probe_ndc, plan=plan)
             if r.budget <= r.executed:
                 self._finish(r, res_idx[i], res_dist[i], cnt[i], now + busy)
                 done.append(r)
@@ -471,6 +542,7 @@ class CostAwareScheduler:
         per-lane-deterministic scan distance path makes the padding (and
         any batch composition) invisible in the results."""
         t0 = self.timer()
+        bt = self._tr.new_trace("scan") if self.tracer is not None else ""
         width = self.batcher.width_for(len(reqs))
         queries = self.batcher.pad_queries(reqs, width)
         prog = self.batcher.pad_program(reqs, width)
@@ -485,9 +557,11 @@ class CostAwareScheduler:
                 n=stats.n)
         if base is not None and pad:
             base = pad_lanes(base, pad)
-        st = scan_search(self.engine, self.cfg, queries, prog, stats=stats,
-                         base_state=base)
-        jax.block_until_ready(st.res_dist)
+        with self._tr.span("scan", bt, lanes=len(reqs), width=width,
+                           late=base is not None):
+            st = scan_search(self.engine, self.cfg, queries, prog,
+                             stats=stats, base_state=base)
+            jax.block_until_ready(st.res_dist)
         res_idx, res_dist = self._final_results(queries, st, True)
         cnt = np.asarray(st.cnt)
         # scan has no lockstep trips; charge the service model the
@@ -518,6 +592,8 @@ class CostAwareScheduler:
         # under the session config — same resume-exact lockstep either way
         cfg = self.cfg_widen if plan == "widen" else self.cfg
         t0 = self.timer()
+        bt = self._tr.new_trace("bucket") if self.tracer is not None else ""
+        l0 = self._launches0()
         width = self.batcher.width_for(len(reqs))
         queries = self.batcher.pad_queries(reqs, width)
         prog = self.batcher.pad_program(reqs, width)
@@ -526,19 +602,25 @@ class CostAwareScheduler:
 
         # Stage 3 — adaptive termination, bounded by the bucket cap.
         entry_hops = np.asarray(state.hops)
-        out = self.engine.search(cfg, queries, prog, budgets, state=state)
-        jax.block_until_ready(out)
+        with self._tr.span("resume", bt, bucket=int(idx), plan=plan,
+                           lanes=len(reqs), width=width) as sp:
+            out = self.engine.search(cfg, queries, prog, budgets,
+                                     state=state, tracer=self.tracer,
+                                     trace_id=bt)
+            jax.block_until_ready(out)
+            lane_steps = (np.asarray(out.hops) - entry_hops)[: len(reqs)]
+            steps = int((np.asarray(out.hops) - entry_hops).max())
+            sp.set(steps=steps)
         res_idx, res_dist = self._final_results(
             queries, out,
             cap is None or any(r.budget <= cap for r in reqs))
         cnt = np.asarray(out.cnt)
         targets = np.asarray(budgets)
-        lane_steps = (np.asarray(out.hops) - entry_hops)[: len(reqs)]
-        steps = int((np.asarray(out.hops) - entry_hops).max())
         busy = (self.timer() - t0 if self.service_model is None
                 else self.service_model(steps, width))
         label = f"bucket{idx}" if plan == "traverse" else f"bucket{idx}:{plan}"
-        launches, early = self._launch_stats(steps, lane_steps)
+        launches, early = self._launch_stats(steps, lane_steps,
+                                             observed=self._launches0() - l0)
         self.metrics.observe_batch(label, len(reqs), width, busy, steps,
                                    launches=launches, early_exit_frac=early)
 
@@ -562,6 +644,19 @@ class CostAwareScheduler:
         req.res_dist = np.asarray(res_dist)
         req.ndc = int(ndc)
         req.completed = at
+        if self.calibration is not None:
+            # cache hits never reach _finish, so every record is a real
+            # execution: predicted Ŵ_q vs the NDC the search actually spent
+            self.calibration.record(
+                rid=req.rid, plan=req.plan or "traverse",
+                predicted=req.budget if req.budget is not None else req.ndc,
+                actual=req.ndc, probe_ndc=req.probe_ndc,
+                n_slices=req.n_slices, alpha=self.scfg.alpha,
+                features=req.features)
+        self._tr.emit("complete", req.trace_id, rid=req.rid, ndc=req.ndc,
+                      plan=str(req.plan or "traverse"),
+                      budget=int(req.budget or 0),
+                      n_slices=req.n_slices, cache_hit=False)
         if self.cache is not None:
             self.cache.put(self._key(req), req.res_idx, req.res_dist, req.ndc)
             if self.scfg.plan == "auto" and req.plan_pure and req.plan:
@@ -579,3 +674,16 @@ class CostAwareScheduler:
     def summary(self) -> dict:
         return self.metrics.summary(self.ingress.n_shed,
                                     self.ingress.n_expired, self.cache)
+
+    def calibration_report(self) -> dict | None:
+        """Rolling calibration health (None when calibration is off)."""
+        return (None if self.calibration is None
+                else self.calibration.report())
+
+    def prometheus(self, prefix: str = "repro") -> str:
+        """One Prometheus-text-format scrape over the serving summary and
+        (when enabled) the calibration report."""
+        from repro.obs.export import prometheus_text
+
+        return prometheus_text(self.summary(), self.calibration_report(),
+                               prefix=prefix)

@@ -218,13 +218,14 @@ def test_scheduled_equals_oneshot_persistent(world):
 
     summ = sched.metrics.summary()
     probe = summ["batches_by_phase"]["probe"]
-    # a persistent engine amortizes: strictly fewer launches than steps
-    # (probe runs ≥ steps_per_launch steps on this workload)
+    # a persistent engine amortizes: strictly fewer launches than steps.
+    # Launch counts are driver-observed dispatches (core.search dispatch
+    # counters), never fewer than the ⌈steps/spl⌉ lower bound — a probe
+    # dispatches once per snapshot and compaction relaunches add more.
     spl = max(1, cfg.steps_per_launch)
     probe_steps = [b["steps"] for b in sched.metrics.batches
                    if b["phase"] == "probe"]
-    # launches are counted per batch: Σ⌈steps_i/spl⌉, not ⌈Σsteps_i/spl⌉
-    assert probe["launches"] == sum(-(-s // spl) for s in probe_steps)
+    assert probe["launches"] >= sum(-(-s // spl) for s in probe_steps)
     assert 0 < probe["launches"] < sum(probe_steps)  # amortization is real
     assert 0.0 <= probe["early_exit_frac"] <= 1.0
 
