@@ -80,6 +80,16 @@ SPECS = {
         scale_keys=("requests", "corpus", "lane_width", "probe_budget",
                     "quick"),
     ),
+    "shard": dict(
+        module="benchmarks.shard_bench",
+        headline=("scaling.efficiency_at_4", "higher"),
+        booleans=("acceptance.results_bit_identical",
+                  "acceptance.ndc_accounting_exact",
+                  "acceptance.efficiency_ge_0p7"),
+        protocol="protocol",
+        scale_keys=("n", "dim", "degree", "batch", "budget", "precision",
+                    "quick"),
+    ),
 }
 
 

@@ -26,6 +26,7 @@ CHUNKS=(
   "tests/test_persistent.py"
   "tests/test_obs.py"
   "tests/test_distributed.py"
+  "tests/test_shard.py"
   "tests/test_models_smoke.py tests/test_dryrun_small.py"
 )
 
@@ -60,7 +61,8 @@ echo "=== filter-algebra smoke ==="
 python -m benchmarks.filter_algebra --quick || fail=1
 
 # Benchmark smoke + artifact gate: runs each headline bench (quant,
-# persistent, planner, serve, obs) at --quick scale into a temp dir, then
+# persistent, planner, serve, obs, shard) at --quick scale into a temp
+# dir, then
 # structurally validates both the fresh output and the committed BENCH_*.json
 # artifacts (headline metric present, acceptance booleans true). Quick runs
 # never scale-match the committed protocol, so no timing-noise regression
@@ -68,7 +70,7 @@ python -m benchmarks.filter_algebra --quick || fail=1
 # before refreshing a committed artifact.
 echo "=== bench smoke + artifact check ==="
 python scripts/bench_check.py --run --quick \
-  quant persistent planner serve obs || fail=1
+  quant persistent planner serve obs shard || fail=1
 
 if [ "$fail" -ne 0 ]; then
   echo "CI: FAILURES (see chunks above)"

@@ -1,7 +1,10 @@
 # The paper's primary contribution: E2E cost estimation + adaptive
 # termination for filtered AKNN search, as a composable JAX module.
 from repro.core.search import SearchConfig, SearchState, run_search, init_state
-from repro.core.state import take_lanes, concat_lanes, pad_lanes
+from repro.core.state import (take_lanes, concat_lanes, pad_lanes,
+                              stack_shards, take_shard)
+from repro.core.sharded import (ShardedSearchEngine, ShardedSearchState,
+                                merge_shard_states)
 from repro.core.backends import (
     TraversalBackend,
     available_backends,
@@ -65,6 +68,11 @@ __all__ = [
     "take_lanes",
     "concat_lanes",
     "pad_lanes",
+    "stack_shards",
+    "take_shard",
+    "ShardedSearchEngine",
+    "ShardedSearchState",
+    "merge_shard_states",
     "ScanStats",
     "scan_search",
     "scan_stats",

@@ -77,11 +77,16 @@ class SearchEngine:
     quant: object | None = None  # Int8Index | PQIndex (repro.quant) — the
                                 # compressed vector store the traversal
                                 # gathers from when precision != float32
+    vector_store: object | None = None  # quant.tiering store for the exact
+                                # rerank; when set (host tier), base_vectors
+                                # is a [N, 0] placeholder — only its row
+                                # count is read in compressed mode
 
     @classmethod
     def build(cls, ds: AttributedDataset, graph: GraphIndex,
               backend: str | None = None, mesh: Mesh | str | None = "auto",
               precision: str = "float32", quant_cfg: dict | None = None,
+              tier: str = "device",
               ) -> "SearchEngine":
         """Construct a device-resident engine.
 
@@ -99,12 +104,30 @@ class SearchEngine:
         quant_cfg  codec knobs forwarded to quant.build_quant_index
                    (pq_subspaces, pq_centroids, pq_iters, pq_levels, seed)
                    plus "train_sample_size" for the codec-fitting sample.
+        tier       "device" keeps float32 vectors device-resident;
+                   "host" (requires a non-float32 precision) moves them to
+                   a host-memory rerank tier (quant.tiering
+                   .HostVectorStore) and leaves only a [N, 0] placeholder
+                   on device — the compressed codes bound device memory,
+                   not the float32 store.
         """
         graph.validate()
         if mesh == "auto":
             mesh = make_search_mesh()
+        store = None
+        vectors = jnp.asarray(ds.vectors)
+        if tier != "device":
+            from repro.quant.tiering import as_vector_store
+
+            if precision == "float32":
+                raise ValueError(
+                    "tier='host' requires a compressed traversal precision "
+                    "('int8' or 'pq') — a float32 traversal reads the full "
+                    "vector store every step, which defeats the tier")
+            store = as_vector_store(ds.vectors, tier)
+            vectors = jnp.zeros((vectors.shape[0], 0), jnp.float32)
         eng = cls(
-            base_vectors=jnp.asarray(ds.vectors),
+            base_vectors=vectors,
             label_attrs=jnp.asarray(ds.labels_packed),
             value_attrs=jnp.asarray(ds.value_matrix),
             neighbors=jnp.asarray(graph.neighbors),
@@ -112,6 +135,7 @@ class SearchEngine:
             backend=backend,
             mesh=mesh,
             precision=precision,
+            vector_store=store,
         )
         if precision != "float32":
             from repro.quant import build_quant_index
@@ -178,8 +202,13 @@ class SearchEngine:
         retained full-precision vectors. Constant ≤ (M+K) float32 distance
         computations per query, not counted into `state.cnt`.
         """
-        from repro.quant import exact_rerank
+        from repro.quant import exact_rerank, exact_rerank_store
 
+        if self.vector_store is not None:
+            return exact_rerank_store(jnp.asarray(queries, jnp.float32),
+                                      self.vector_store, state.cand_idx,
+                                      state.cand_valid, state.res_idx,
+                                      int(state.res_idx.shape[1]))
         return exact_rerank(jnp.asarray(queries, jnp.float32),
                             self.base_vectors, state.cand_idx,
                             state.cand_valid, state.res_idx,
@@ -218,6 +247,12 @@ class SearchEngine:
             raise ValueError(
                 f"SearchConfig(precision={cfg.precision!r}) on an engine "
                 "without a quant index — build with precision=...")
+        if cfg.precision == "float32" and self.base_vectors.shape[1] == 0:
+            raise ValueError(
+                "float32 traversal on a host-tiered engine: the device "
+                "holds only a vector placeholder — search at the engine's "
+                "compressed precision (rerank stays exact via the host "
+                "tier) or rebuild with tier='device'")
         quant = self.quant if cfg.precision != "float32" else None
         prog = self.compile(filt)
         attrs = self._attrs()

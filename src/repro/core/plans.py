@@ -68,6 +68,10 @@ class ScanStats(NamedTuple):
 def scan_stats(engine: SearchEngine, prog: FilterProgram,
                chunk: int = 2048) -> ScanStats:
     """Compile the candidate bitmap + exact selectivity statistics."""
+    if getattr(engine, "is_sharded", False):
+        # index-axis-sharded engine: per-shard bitmap passes, one global
+        # ScanStats (core.sharded) — keeps the planner engine-agnostic
+        return engine.scan_stats(prog, chunk=chunk)
     valid, frac = eval_program_matrix(prog, engine.label_attrs,
                                       engine.value_attrs, chunk=chunk)
     return ScanStats(valid=valid, counts=valid.sum(axis=1).astype(np.int64),
@@ -105,6 +109,11 @@ def scan_search(
     *replaced* — the scan covers the full valid set, a superset of anything
     the probe saw.
     """
+    if getattr(engine, "is_sharded", False):
+        # sharded engines scan shard-by-shard and merge (core.sharded);
+        # the returned ShardedSearchState is terminal like this one
+        return engine.scan(cfg, queries, filt, stats=stats,
+                           base_state=base_state)
     prog = engine.compile(filt)
     if stats is None:
         stats = scan_stats(engine, prog)
@@ -127,6 +136,11 @@ def scan_search(
     mask = jnp.arange(v)[None, :] < counts[:, None]
 
     if precision == "float32":
+        if engine.base_vectors.shape[1] == 0:
+            raise ValueError(
+                "float32 scan on a host-tiered engine: the device holds "
+                "only a vector placeholder — scan at the engine's "
+                "compressed precision (the terminal rerank stays exact)")
         xg = engine.base_vectors[idx]
         dd = kops.masked_scan_dist(q, xg, mask)
         err_add = jnp.zeros((b,), jnp.float32)

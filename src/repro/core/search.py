@@ -182,6 +182,12 @@ run_search = functools.partial(
     donate_argnames=("state",),
 )(_run_search_impl)
 
+# Untraced entry for callers already inside a traced context (the sharded
+# engine's shard_map body runs one traversal per local index shard, with a
+# *traced* per-shard entry point — init_state only touches entry_point via
+# jnp ops, so tracing it is safe where run_search's static_argnames aren't).
+run_search_impl = _run_search_impl
+
 
 # --------------------------------------------------------------------------
 # persistent execution: multi-step launches + eager active-lane compaction

@@ -223,6 +223,27 @@ def pad_lanes(tree, pad: int):
         lambda a: jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1)), tree)
 
 
+# ---- shard surgery (index-axis-sharded engines) -----------------------------
+# A sharded engine carries one SearchState per index shard, stacked along a
+# *second* axis ([B, S, ...] leaves) so the lane-surgery helpers above keep
+# operating on axis 0 unchanged. These two helpers move between the stacked
+# form and the per-shard [B, ...] states the lockstep loop consumes.
+
+
+@jax.jit
+def stack_shards(states):
+    """Stack per-shard pytrees ([B, ...] leaves) along a new shard axis 1."""
+    if len(states) == 1:
+        return jax.tree.map(lambda a: a[:, None], states[0])
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=1), *states)
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def take_shard(tree, s: int):
+    """Select shard `s` from a shard-stacked pytree ([B, S, ...] leaves)."""
+    return jax.tree.map(lambda a: a[:, s], tree)
+
+
 def topk_results(state: SearchState) -> tuple[np.ndarray, np.ndarray]:
     """Host-side (idx, dist) of the result set."""
     return np.asarray(state.res_idx), np.asarray(state.res_dist)

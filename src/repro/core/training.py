@@ -63,9 +63,12 @@ def generate_training_data(
         e = min(s + chunk, n)
         q = workload.queries[s:e]
         filt = workload.filter_slice(s, e)
+        # ground truth comes from the dataset, not the engine's device
+        # arrays: host-tiered and index-sharded engines hold placeholders /
+        # per-shard slices, and `ds` is the same rows either way
         gt_idx, gt_dist = filtered_knn_exact(
-            q, np.asarray(engine.base_vectors), filt,
-            np.asarray(engine.label_attrs), np.asarray(engine.value_attrs), cfg.k,
+            q, np.asarray(ds.vectors), filt,
+            np.asarray(ds.labels_packed), np.asarray(ds.value_matrix), cfg.k,
         )
         if compressed:
             # convergence is judged in the metric the traversal actually
@@ -73,10 +76,12 @@ def generate_training_data(
             from repro.index.bruteforce import valid_mask
             from repro.quant import compressed_filtered_topk
 
-            ok = valid_mask(filt, np.asarray(engine.label_attrs),
-                            np.asarray(engine.value_attrs))
+            ok = valid_mask(filt, np.asarray(ds.labels_packed),
+                            np.asarray(ds.value_matrix))
             conv_dist, _ = compressed_filtered_topk(
-                engine.effective_precision(cfg), engine.quant, q, ok, cfg.k)
+                engine.effective_precision(cfg),
+                getattr(engine, "quant_concat", None) or engine.quant,
+                q, ok, cfg.k)
         else:
             conv_dist = gt_dist
         prog = engine.compile(filt)  # once for the probe + exhaustion resume

@@ -1,10 +1,24 @@
 from repro.distributed.sharding import (
     ShardingRules,
     DEFAULT_RULES,
+    INDEX_AXIS,
     spec_for,
     tree_shardings,
     batch_spec,
+    search_mesh_2d,
+)
+from repro.distributed.fault_tolerance import (
+    best_mesh_shape,
+    best_search_mesh_shape,
+)
+from repro.distributed.merge import (
+    butterfly_merge,
+    merge_sorted_pools,
+    merge_stacked,
+    pool_positions,
 )
 
-__all__ = ["ShardingRules", "DEFAULT_RULES", "spec_for", "tree_shardings",
-           "batch_spec"]
+__all__ = ["ShardingRules", "DEFAULT_RULES", "INDEX_AXIS", "spec_for",
+           "tree_shardings", "batch_spec", "search_mesh_2d",
+           "best_mesh_shape", "best_search_mesh_shape", "butterfly_merge",
+           "merge_sorted_pools", "merge_stacked", "pool_positions"]

@@ -43,6 +43,27 @@ def best_mesh_shape(n_devices: int, model_parallel: int = 16,
     return (data, model), ("data", "model")
 
 
+def best_search_mesh_shape(n_devices: int, n_shards: int,
+                           ) -> tuple[tuple, tuple]:
+    """Largest valid 2-D (data, index) search mesh using ≤ n_devices.
+
+    The index axis must own whole shards (its size must divide `n_shards`)
+    or per-shard traversal state cannot be placed; elastic restart after a
+    node loss therefore picks index = the largest divisor of the surviving
+    device count that also divides the shard count, and gives the rest to
+    batch parallelism. Indivisible counts degrade gracefully: with 7
+    devices and 4 shards the index axis collapses to 1 (every device holds
+    all shards' share of the batch work) instead of wedging the restart.
+    """
+    if n_devices < 1:
+        raise ValueError(f"n_devices must be >= 1, got {n_devices}")
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    index = max(i for i in range(1, min(n_devices, n_shards) + 1)
+                if n_devices % i == 0 and n_shards % i == 0)
+    return (n_devices // index, index), ("data", "index")
+
+
 @dataclasses.dataclass
 class StragglerEvent:
     step: int

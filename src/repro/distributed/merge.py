@@ -1,0 +1,130 @@
+"""Log-depth cross-shard top-k merge for index-axis-sharded search.
+
+Each index shard finishes a traversal holding sorted per-shard pools
+(result set [B, K], candidate queue [B, M]) over shard-*local* node ids.
+This module combines S such pools into the global top-m — the operation
+both execution paths of the sharded engine share:
+
+  * host / single-device: `merge_stacked` — a pairwise merge tree over the
+    stacked [B, S, W] pools, ⌈log2 S⌉ rounds;
+  * under `shard_map`: `butterfly_merge` — the same pairwise primitive over
+    `ppermute` XOR-butterfly rounds (power-of-two index axis) or one
+    `all_gather` + in-device tree (any axis size), log-depth either way.
+
+Bitwise determinism is the whole design. Every pool entry carries an
+explicit *position* lane — its slot in the virtual concatenation of the S
+pools (pos = shard·W + slot), unique across the union. The pairwise
+primitive (`merge_sorted_pools`, a single bitonic merge phase from
+kernels.topk with the pos lane in the comparator) keeps the best m under
+the lexicographic total order (dist, pos). A top-m under a total order is
+associative and commutative, so *any* merge tree — the host loop, the
+device butterfly, or a flat host sort of the concatenated pools — produces
+THE unique answer: the first m entries of the stable-by-position sort of
+the union, ties included. That is what lets the bench assert the sharded
+shard_map path bit-identical to the single-device loop path.
+
+Distances are moved, never recomputed, so no float reassociation can leak
+in through the merge itself.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk import bitonic_merge_phase
+
+INF = jnp.float32(jnp.inf)
+#: pos value for width padding — sorts after every real entry (real pos are
+#: small non-negative slot indices)
+PAD_POS = jnp.int32(2**31 - 1)
+
+
+def pool_positions(width: int, shard0, n_shards: int, b: int):
+    """Position lanes [B, n_shards, width] for pools of global shard ids
+    shard0 … shard0+n_shards-1: pos = global_shard · width + slot.
+
+    `shard0` may be a traced scalar (the shard_map body offsets by
+    `axis_index · shards_per_device`)."""
+    s = jnp.arange(n_shards, dtype=jnp.int32) + jnp.int32(shard0)
+    pos = s[:, None] * jnp.int32(width) + jnp.arange(width, dtype=jnp.int32)
+    return jnp.broadcast_to(pos[None], (b, n_shards, width))
+
+
+def merge_sorted_pools(d_a, p_a, o_a, d_b, p_b, o_b, m: int):
+    """Merge two pools sorted ascending by (dist, pos); keep the best m.
+
+    d_* [B, W*] f32, p_* int32 payloads, o_* int32 positions (unique across
+    both pools). `A ++ inf-pad ++ reversed(B)` is bitonic under (dist, pos)
+    — pads carry (inf, PAD_POS), ≥ every real entry — so one log-depth
+    bitonic merge phase sorts it. Returns (dist, payload, pos) [B, m].
+    """
+    b, wa = d_a.shape
+    wb = d_b.shape[1]
+    w = 1 << (wa + wb - 1).bit_length()
+    pad = w - wa - wb
+    keys = jnp.concatenate(
+        [d_a, jnp.full((b, pad), INF, jnp.float32), d_b[:, ::-1]], axis=1)
+    pos = jnp.concatenate(
+        [o_a, jnp.full((b, pad), PAD_POS, jnp.int32), o_b[:, ::-1]], axis=1)
+    pay = jnp.concatenate(
+        [p_a, jnp.full((b, pad), -1, jnp.int32), p_b[:, ::-1]], axis=1)
+    keys, pos, (pay,) = bitonic_merge_phase(keys, pos, (pay,))
+    return keys[:, :m], pay[:, :m], pos[:, :m]
+
+
+def merge_stacked(dists, pays, m: int, shard0: int = 0, pos=None):
+    """Merge stacked per-shard pools [B, S, W] → global best m [B, m].
+
+    Pairwise merge tree over the shard axis (⌈log2 S⌉ rounds). `shard0`
+    offsets the position lane so a device holding a contiguous slice of
+    shards composes with the cross-device butterfly on the same global
+    position space. Returns (dist, payload, pos).
+    """
+    b, s, w = dists.shape
+    if pos is None:
+        pos = pool_positions(w, shard0, s, b)
+    pools = [(dists[:, i], pays[:, i], pos[:, i]) for i in range(s)]
+    while len(pools) > 1:
+        nxt = []
+        for i in range(0, len(pools) - 1, 2):
+            a, c = pools[i], pools[i + 1]
+            nxt.append(merge_sorted_pools(*a, *c, m))
+        if len(pools) % 2:
+            d, p, o = pools[-1]
+            nxt.append((d[:, :m], p[:, :m], o[:, :m]) if d.shape[1] > m
+                       else (d, p, o))
+        pools = nxt
+    d, p, o = pools[0]
+    if d.shape[1] > m:
+        d, p, o = d[:, :m], p[:, :m], o[:, :m]
+    return d, p, o
+
+
+def butterfly_merge(d, p, o, m: int, axis_name: str, axis_size: int):
+    """Cross-device merge of per-device pools under shard_map, log-depth.
+
+    d/p/o [B, m] — each device's already locally-merged pool (sorted by
+    (dist, pos), positions globally unique). Power-of-two axes run the
+    XOR butterfly: round r exchanges pools with partner `i ^ 2^r` via
+    `ppermute` and merges, so after log2(S) rounds every device holds the
+    identical global top-m. Other sizes fall back to one `all_gather` +
+    the in-device merge tree (same result, one bulkier collective).
+    """
+    if axis_size == 1:
+        return d, p, o
+    if axis_size & (axis_size - 1) == 0:
+        for r in range(axis_size.bit_length() - 1):
+            perm = [(i, i ^ (1 << r)) for i in range(axis_size)]
+            pd = jax.lax.ppermute(d, axis_name, perm)
+            pp = jax.lax.ppermute(p, axis_name, perm)
+            po = jax.lax.ppermute(o, axis_name, perm)
+            # operand order is irrelevant: the merge output is the unique
+            # (dist, pos)-sorted top-m of the union, so both partners of a
+            # pair compute byte-identical pools without coordinating
+            d, p, o = merge_sorted_pools(d, p, o, pd, pp, po, m)
+        return d, p, o
+    ad = jax.lax.all_gather(d, axis_name)          # [S, B, m]
+    ap = jax.lax.all_gather(p, axis_name)
+    ao = jax.lax.all_gather(o, axis_name)
+    return merge_stacked(jnp.moveaxis(ad, 0, 1), jnp.moveaxis(ap, 0, 1), m,
+                         pos=jnp.moveaxis(ao, 0, 1))

@@ -35,9 +35,15 @@ class ShardingRules:
         return dict(self.rules).get(logical, ())
 
 
+#: mesh axis the sharded search engine partitions *index* data over
+#: (graph neighbor lists, quantized codes, attribute bundles). Composes
+#: with the batch axis ("data") as a 2-D (batch × index) search mesh.
+INDEX_AXIS = "index"
+
 DEFAULT_RULES = ShardingRules(
     rules=(
         ("vocab", ("model",)),
+        ("shard", (INDEX_AXIS,)),     # per-shard index data (search scale-out)
         ("embed", ("data",)),         # FSDP
         ("heads", ("model",)),
         ("kv_heads", ("model",)),
@@ -118,6 +124,24 @@ def batch_spec(mesh: Mesh, global_batch: int,
                 cand = cand[0]
             return PartitionSpec(cand)
     return PartitionSpec(None)
+
+
+def search_mesh_2d(n_shards: int, devices=None) -> Mesh | None:
+    """2-D ("data", "index") mesh for index-axis-sharded search.
+
+    The index axis gets the largest device divisor that also divides
+    `n_shards` (each index device then owns n_shards/index whole shards);
+    the rest of the devices parallelize the batch. Returns None on a
+    single device — the sharded engine's loop path needs no mesh.
+    """
+    from repro.distributed.fault_tolerance import best_search_mesh_shape
+
+    devices = list(jax.devices()) if devices is None else list(devices)
+    if len(devices) <= 1:
+        return None
+    shape, names = best_search_mesh_shape(len(devices), n_shards)
+    n_used = int(np.prod(shape))
+    return Mesh(np.asarray(devices[:n_used]).reshape(shape), names)
 
 
 def _ambient_mesh():

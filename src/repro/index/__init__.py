@@ -1,5 +1,6 @@
-from repro.index.graph import GraphIndex
-from repro.index.builder import build_graph_index
+from repro.index.graph import GraphIndex, ShardedGraphIndex
+from repro.index.builder import build_graph_index, build_sharded_graph_index
 from repro.index.bruteforce import filtered_knn_exact, knn_exact
 
-__all__ = ["GraphIndex", "build_graph_index", "filtered_knn_exact", "knn_exact"]
+__all__ = ["GraphIndex", "ShardedGraphIndex", "build_graph_index",
+           "build_sharded_graph_index", "filtered_knn_exact", "knn_exact"]

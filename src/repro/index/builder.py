@@ -19,7 +19,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.index.graph import GraphIndex
+from repro.index.graph import GraphIndex, ShardedGraphIndex
 
 
 def _block_sqdist(x: np.ndarray, y: np.ndarray) -> np.ndarray:
@@ -214,3 +214,39 @@ def build_graph_index(
     g = GraphIndex(neighbors=final, entry_point=entry, dim=dim)
     g.validate()
     return g
+
+
+def build_sharded_graph_index(
+    vectors: np.ndarray,
+    n_shards: int,
+    degree: int = 32,
+    **build_kw,
+) -> ShardedGraphIndex:
+    """Partition the corpus into contiguous equal slices and build one
+    independent proximity graph per slice (shard-local node ids).
+
+    Per-shard graphs keep the builder embarrassingly parallel and the
+    traversal loop unchanged; the price is that a query must probe every
+    shard (the sharded engine splits its NDC budget ⌈W/S⌉ per shard) and
+    the global result set comes from the cross-shard merge. `build_kw`
+    forwards to `build_graph_index` (n_iters, alpha, seed, ...).
+    """
+    n = vectors.shape[0]
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    if n % n_shards != 0:
+        raise ValueError(
+            f"N={n} not divisible by n_shards={n_shards} — pad the corpus "
+            f"to a multiple of {n_shards} (equal slices are what lets "
+            "shard_map place one stacked [S, n_s, R] neighbor array)")
+    ns = n // n_shards
+    shards = []
+    for s in range(n_shards):
+        g = build_graph_index(vectors[s * ns:(s + 1) * ns], degree=degree,
+                              **build_kw)
+        g.shard = s
+        g.offset = s * ns
+        shards.append(g)
+    out = ShardedGraphIndex(shards=shards)
+    out.validate()
+    return out

@@ -125,6 +125,38 @@ def sort_kv_f32(keys, vals):
     return jax.lax.bitcast_convert_type(ks, jnp.float32), vs
 
 
+def bitonic_merge_phase(keys, pos, lanes):
+    """One full bitonic merge phase (strides w/2 … 1, all ascending) over a
+    row-bitonic [B, w] block under the lexicographic total order (key, pos).
+
+    `lanes` is a tuple of extra [B, w] arrays riding the same selects.
+    Because `pos` participates in the comparison, the phase realizes a
+    *total* order whenever the pos values within a row are distinct — the
+    property the cross-shard merge (distributed.merge) uses to make the
+    merged result independent of the merge-tree shape, bit for bit.
+    """
+    b, w = keys.shape
+    j = w // 2
+    while j >= 1:
+        kk = keys.reshape(b, w // (2 * j), 2, j)
+        pp = pos.reshape(b, w // (2 * j), 2, j)
+        ll = [x.reshape(b, w // (2 * j), 2, j) for x in lanes]
+        lo_k, hi_k = kk[:, :, 0, :], kk[:, :, 1, :]
+        lo_p, hi_p = pp[:, :, 0, :], pp[:, :, 1, :]
+        keep = (lo_k < hi_k) | ((lo_k == hi_k) & (lo_p <= hi_p))
+        keys = jnp.stack([jnp.where(keep, lo_k, hi_k),
+                          jnp.where(keep, hi_k, lo_k)], axis=2).reshape(b, w)
+        pos = jnp.stack([jnp.where(keep, lo_p, hi_p),
+                         jnp.where(keep, hi_p, lo_p)], axis=2).reshape(b, w)
+        lanes = tuple(
+            jnp.stack([jnp.where(keep, x[:, :, 0, :], x[:, :, 1, :]),
+                       jnp.where(keep, x[:, :, 1, :], x[:, :, 0, :])],
+                      axis=2).reshape(b, w)
+            for x in ll)
+        j //= 2
+    return keys, pos, lanes
+
+
 def bitonic_merge_sorted(old_d, old_p, ns_d, ns_p, m):
     """Merge sorted asc [B,M0] with sorted asc [B,R] -> best m, log-depth.
 
@@ -149,22 +181,7 @@ def bitonic_merge_sorted(old_d, old_p, ns_d, ns_p, m):
                          jnp.arange(m0 + r, w, dtype=jnp.int32),  # pads last
                          jnp.arange(m0 + r - 1, m0 - 1, -1, dtype=jnp.int32)]),
         (b, w))
-    j = w // 2
-    while j >= 1:
-        kk = keys.reshape(b, w // (2 * j), 2, j)
-        vv = vals.reshape(b, w // (2 * j), 2, j)
-        pp = pos.reshape(b, w // (2 * j), 2, j)
-        lo_k, hi_k = kk[:, :, 0, :], kk[:, :, 1, :]
-        lo_v, hi_v = vv[:, :, 0, :], vv[:, :, 1, :]
-        lo_p, hi_p = pp[:, :, 0, :], pp[:, :, 1, :]
-        keep = (lo_k < hi_k) | ((lo_k == hi_k) & (lo_p <= hi_p))
-        keys = jnp.stack([jnp.where(keep, lo_k, hi_k),
-                          jnp.where(keep, hi_k, lo_k)], axis=2).reshape(b, w)
-        vals = jnp.stack([jnp.where(keep, lo_v, hi_v),
-                          jnp.where(keep, hi_v, lo_v)], axis=2).reshape(b, w)
-        pos = jnp.stack([jnp.where(keep, lo_p, hi_p),
-                         jnp.where(keep, hi_p, lo_p)], axis=2).reshape(b, w)
-        j //= 2
+    keys, _, (vals,) = bitonic_merge_phase(keys, pos, (vals,))
     return keys[:, :m], vals[:, :m]
 
 

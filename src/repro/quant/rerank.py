@@ -29,15 +29,9 @@ import jax.numpy as jnp
 from repro.kernels.distance import sqdist_bdrd
 
 
-@functools.partial(jax.jit, static_argnames=("k",))
-def exact_rerank(queries, base_vectors, cand_idx, cand_valid, res_idx, k: int):
-    """Re-score the candidate pool with exact float32 distances.
-
-    queries [B, d], base_vectors [N, d] f32, cand_idx/cand_valid [B, M],
-    res_idx [B, K0] → (res_dist [B, k] ascending, res_idx [B, k]); rows
-    with fewer than k valid pool entries pad with dist=+inf, idx=-1.
-    """
-    b = queries.shape[0]
+def _dedup_pool(cand_idx, cand_valid, res_idx):
+    """Deduplicated candidate pool [B, P] (invalid/duplicate rows → -1)."""
+    b = cand_idx.shape[0]
     pool = jnp.concatenate(
         [res_idx, jnp.where(cand_valid, cand_idx, -1)], axis=1)   # [B, P]
 
@@ -49,13 +43,47 @@ def exact_rerank(queries, base_vectors, cand_idx, cand_valid, res_idx, k: int):
         [jnp.zeros((b, 1), bool), s[:, 1:] == s[:, :-1]], axis=1)
     inv = jnp.argsort(order, axis=1, stable=True)
     dup = jnp.take_along_axis(dup_sorted, inv, axis=1)
-    pool = jnp.where(dup, -1, pool)
+    return jnp.where(dup, -1, pool)
 
+
+def _score_pool(queries, pool, xv, k: int):
+    """Exact distances over gathered pool rows → stable ascending top-k."""
     ok = pool >= 0
-    xv = base_vectors[jnp.maximum(pool, 0)]                       # [B, P, d]
     dd = jnp.where(ok, sqdist_bdrd(jnp.asarray(queries, jnp.float32), xv),
                    jnp.inf)
     sel = jnp.argsort(dd, axis=1, stable=True)[:, :k]
     rd = jnp.take_along_axis(dd, sel, axis=1)
     ri = jnp.take_along_axis(pool, sel, axis=1)
     return rd, jnp.where(jnp.isfinite(rd), ri, -1)
+
+
+rerank_pool = jax.jit(_dedup_pool)
+score_pool = functools.partial(jax.jit, static_argnames=("k",))(_score_pool)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def exact_rerank(queries, base_vectors, cand_idx, cand_valid, res_idx, k: int):
+    """Re-score the candidate pool with exact float32 distances.
+
+    queries [B, d], base_vectors [N, d] f32, cand_idx/cand_valid [B, M],
+    res_idx [B, K0] → (res_dist [B, k] ascending, res_idx [B, k]); rows
+    with fewer than k valid pool entries pad with dist=+inf, idx=-1.
+    """
+    pool = _dedup_pool(cand_idx, cand_valid, res_idx)
+    xv = base_vectors[jnp.maximum(pool, 0)]                       # [B, P, d]
+    return _score_pool(queries, pool, xv, k)
+
+
+def exact_rerank_store(queries, store, cand_idx, cand_valid, res_idx, k: int):
+    """`exact_rerank` against a tiered vector store (quant.tiering).
+
+    Same three stages — dedup, gather, score — but the gather goes through
+    `store.gather`, which on the host tier streams only the ≤ (M + K) pool
+    rows per query instead of requiring the [N, d] float32 array on device.
+    The dedup and score stages are the *same jitted functions* the fused
+    path runs and the gathered rows are the same bytes, so both paths
+    return bit-identical (dist, idx).
+    """
+    pool = rerank_pool(cand_idx, cand_valid, res_idx)
+    xv = store.gather(pool)
+    return score_pool(jnp.asarray(queries, jnp.float32), pool, xv, k)

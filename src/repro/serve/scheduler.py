@@ -151,6 +151,11 @@ class CostAwareScheduler:
         # before results leave the scheduler
         self._codec = engine.codec_key(cfg)
         self._rerank = engine.effective_precision(cfg) != "float32"
+        # index-sharded engines (core.sharded) report their layout through
+        # the serving summary: per-shard budget splitting means a request's
+        # NDC spreads over n_shards traversals, which capacity planning
+        # needs to see. 1 = unsharded.
+        self._n_shards = int(getattr(engine, "n_shards", 1))
         from repro.core.search import get_backend
         from repro.obs.calibration import CalibrationMonitor
         from repro.obs.trace import as_tracer
@@ -672,8 +677,10 @@ class CostAwareScheduler:
         self.metrics.complete(req)
 
     def summary(self) -> dict:
-        return self.metrics.summary(self.ingress.n_shed,
-                                    self.ingress.n_expired, self.cache)
+        out = self.metrics.summary(self.ingress.n_shed,
+                                   self.ingress.n_expired, self.cache)
+        out["n_shards"] = self._n_shards
+        return out
 
     def calibration_report(self) -> dict | None:
         """Rolling calibration health (None when calibration is off)."""

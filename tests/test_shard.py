@@ -1,0 +1,362 @@
+"""Index-axis sharding: merge correctness, parity with per-shard reference
+searches, elastic mesh shapes, tiering, and the e2e/planner/serve stack on a
+sharded engine.
+
+The parity tests pin the sharded contract (core/sharded.py docstring):
+
+  loop path  — bit-identical to independent per-shard searches followed by
+               a host lexsort merge of the pools under (dist, pos), with
+               exact integer counter sums, at every precision.
+  mesh path  — bit-identical to the loop path at float32 (subprocess test
+               with a forced multi-device host platform); quantized
+               distances agree within 1 ulp (XLA:CPU SPMD FMA-contraction
+               caveat) with identical candidate ids and exact counters.
+"""
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+from _hyp_compat import given, settings, st  # hypothesis or fallback
+
+import jax.numpy as jnp
+
+from repro.core import SearchConfig, SearchEngine, ShardedSearchEngine
+from repro.data import make_dataset, make_label_workload
+from repro.distributed.fault_tolerance import best_search_mesh_shape
+from repro.distributed.merge import merge_stacked
+from repro.index import build_graph_index
+from repro.index.builder import build_sharded_graph_index
+from repro.index.graph import GraphIndex
+
+
+# ------------------------------------------------------------- mesh shapes ----
+
+def test_best_search_mesh_shape():
+    """Index axis = largest common divisor of devices and shards; the rest
+    goes to batch. Indivisible counts degrade to index=1, never wedge."""
+    assert best_search_mesh_shape(6, 4) == ((3, 2), ("data", "index"))
+    assert best_search_mesh_shape(7, 4) == ((7, 1), ("data", "index"))
+    assert best_search_mesh_shape(8, 4) == ((2, 4), ("data", "index"))
+    assert best_search_mesh_shape(4, 6) == ((2, 2), ("data", "index"))
+    assert best_search_mesh_shape(1, 1) == ((1, 1), ("data", "index"))
+    assert best_search_mesh_shape(4, 1) == ((4, 1), ("data", "index"))
+    with pytest.raises(ValueError):
+        best_search_mesh_shape(0, 4)
+    with pytest.raises(ValueError):
+        best_search_mesh_shape(4, 0)
+
+
+# --------------------------------------------------------- graph validation ----
+
+def test_graph_validate_names_offending_shard():
+    """A neighbor id >= n_s in a shard slice is a cross-shard edge — the
+    error must carry the shard ordinal and global row range."""
+    nb = np.zeros((8, 2), np.int32)
+    nb[0] = [1, 2]
+    nb[5] = [9, -1]  # >= n: global id leaked into a shard-local slice
+    g = GraphIndex(neighbors=nb, entry_point=0, dim=4, shard=2, offset=16)
+    with pytest.raises(ValueError) as ei:
+        g.validate()
+    msg = str(ei.value)
+    assert "shard 2" in msg and "[16, 24)" in msg and "global 21" in msg
+
+
+def test_sharded_graph_builder_rejects_indivisible():
+    ds = make_dataset(n=130, dim=8, n_clusters=2, alphabet_size=8, seed=0)
+    with pytest.raises(ValueError):
+        build_sharded_graph_index(ds.vectors, 4, degree=4, seed=0)
+
+
+# ---------------------------------------------------------- merge property ----
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 8), st.integers(1, 6),
+       st.integers(1, 12), st.integers(0, 2**31 - 1))
+def test_merge_stacked_matches_host_lexsort(b, w, s, m, seed):
+    """The log-depth merge tree == a flat host lexsort of the concatenated
+    pools under (dist, pos) — ties included (distances drawn from 4 values
+    so collisions are the norm, resolved by the unique position lane)."""
+    rng = np.random.default_rng(seed)
+    dists = np.sort(rng.integers(0, 4, (b, s, w)).astype(np.float32), axis=2)
+    # sprinkle INF pads like real part-filled pools (payload -1)
+    pad = rng.random((b, s, w)) < 0.2
+    dists[pad] = np.inf
+    dists = np.sort(dists, axis=2)
+    pays = rng.integers(0, 1000, (b, s, w)).astype(np.int32)
+    pays[np.isinf(dists)] = -1
+    m = min(m, s * w)
+
+    d, p, o = merge_stacked(jnp.asarray(dists), jnp.asarray(pays), m)
+    d, p, o = np.asarray(d), np.asarray(p), np.asarray(o)
+
+    pos = np.broadcast_to(
+        (np.arange(s)[:, None] * w + np.arange(w))[None], (b, s, w))
+    fd, fo = dists.reshape(b, -1), np.ascontiguousarray(pos.reshape(b, -1))
+    fp = pays.reshape(b, -1)
+    for i in range(b):
+        order = np.lexsort((fo[i], fd[i]))[:m]
+        assert np.array_equal(d[i], fd[i][order]), (i, d[i], fd[i][order])
+        assert np.array_equal(o[i], fo[i][order])
+        assert np.array_equal(p[i], fp[i][order])
+
+
+# ------------------------------------------------------------ parity matrix ----
+
+def _host_merge_res(states, offsets, k):
+    """Reference cross-shard merge of the per-shard result pools: flat
+    numpy lexsort by (dist, pos), pos = shard * k + slot."""
+    s = len(states)
+    b = states[0].res_dist.shape[0]
+    dist = np.stack([np.asarray(st.res_dist) for st in states], axis=1)
+    idx = np.stack([np.asarray(st.res_idx) for st in states], axis=1)
+    gidx = np.where(idx >= 0, idx + np.asarray(offsets)[None, :, None], -1)
+    pos = np.broadcast_to(
+        (np.arange(s)[:, None] * k + np.arange(k))[None], (b, s, k))
+    out_d = np.empty((b, k), np.float32)
+    out_i = np.empty((b, k), np.int32)
+    for q in range(b):
+        order = np.lexsort((pos[q].ravel(), dist[q].ravel()))[:k]
+        out_d[q] = dist[q].ravel()[order]
+        out_i[q] = gidx[q].ravel()[order]
+    return out_d, out_i
+
+
+@pytest.fixture(scope="module")
+def shard_ds():
+    ds = make_dataset(n=512, dim=8, n_clusters=4, alphabet_size=16, seed=0)
+    wl = make_label_workload(ds, batch=9, kind="contain", seed=3)
+    return ds, wl
+
+
+def _sg2(ds):
+    return build_sharded_graph_index(np.asarray(ds.vectors), 2, degree=8,
+                                     seed=0)
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+@pytest.mark.parametrize("precision", ["float32", "int8", "pq"])
+def test_sharded_matches_per_shard_reference(shard_ds, n_shards, precision):
+    """Loop-path sharded search (traverse + widen) == independent per-shard
+    searches + host lexsort merge; merged counters are exact sums."""
+    ds, wl = shard_ds
+    qcfg = ({"pq_subspaces": 4, "train_sample_size": 256}
+            if precision == "pq" else {"train_sample_size": 256})
+    sg = build_sharded_graph_index(np.asarray(ds.vectors), n_shards,
+                                   degree=8, seed=0)
+    eng = ShardedSearchEngine.build(ds, sg, mesh=None, precision=precision,
+                                    quant_cfg=None if precision == "float32"
+                                    else qcfg)
+    for mode in ("post", "widen"):
+        cfg = SearchConfig(k=5, queue_size=32, pred_kind=0, mode=mode)
+        budget = 300
+        out = eng.search(cfg, wl.queries, wl.spec, budget)
+
+        sbud = -(-budget // n_shards)
+        parts = [sh.search(cfg, wl.queries, wl.spec, sbud)
+                 for sh in eng.shards]
+        rd, ri = _host_merge_res(parts, eng.offsets, cfg.k)
+        assert np.array_equal(np.asarray(out.res_dist), rd), (mode, precision)
+        assert np.array_equal(np.asarray(out.res_idx), ri)
+        for f in ("cnt", "n_inspected", "hops", "n_clause_valid"):
+            want = sum(np.asarray(getattr(p, f), np.int64) for p in parts)
+            assert np.array_equal(np.asarray(getattr(out, f), np.int64),
+                                  want), (mode, precision, f)
+        assert np.array_equal(
+            np.asarray(out.active),
+            np.any(np.stack([np.asarray(p.active) for p in parts]), axis=0))
+
+
+def test_single_shard_engine_is_the_plain_engine(shard_ds):
+    """S=1 anchor: a 1-shard sharded engine is bitwise the unsharded one
+    (merge of one pool is the identity)."""
+    ds, wl = shard_ds
+    graph = build_graph_index(ds.vectors, degree=8, seed=0)
+    plain = SearchEngine.build(ds, graph, mesh=None)
+    shard1 = ShardedSearchEngine.build(
+        ds, build_sharded_graph_index(np.asarray(ds.vectors), 1, degree=8,
+                                      seed=0), mesh=None)
+    cfg = SearchConfig(k=5, queue_size=32, pred_kind=0)
+    a = plain.search(cfg, wl.queries, wl.spec, 400)
+    b = shard1.search(cfg, wl.queries, wl.spec, 400)
+    for f in ("res_idx", "res_dist", "cnt", "cand_idx", "cand_dist",
+              "n_inspected", "d_start"):
+        assert np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f))), f
+
+
+@pytest.mark.parametrize("n_shards", [2, 4])
+@pytest.mark.parametrize("precision", ["float32", "int8", "pq"])
+def test_sharded_scan_matches_unsharded(shard_ds, n_shards, precision):
+    """The scan plan is an exact filtered brute force — sharding must not
+    change its results or its NDC accounting at any precision (shard codecs
+    train on the same global sample as the unsharded engine's, so the
+    compressed scan metric is identical)."""
+    from repro.core.plans import scan_search
+
+    ds, wl = shard_ds
+    qcfg = (None if precision == "float32"
+            else {"pq_subspaces": 4, "train_sample_size": 256}
+            if precision == "pq" else {"train_sample_size": 256})
+    graph = build_graph_index(ds.vectors, degree=8, seed=0)
+    plain = SearchEngine.build(ds, graph, mesh=None, precision=precision,
+                               quant_cfg=None if qcfg is None
+                               else dict(qcfg))
+    sg = build_sharded_graph_index(np.asarray(ds.vectors), n_shards,
+                                   degree=8, seed=0)
+    eng = ShardedSearchEngine.build(ds, sg, mesh=None, precision=precision,
+                                    quant_cfg=None if qcfg is None
+                                    else dict(qcfg))
+    cfg = SearchConfig(k=5, queue_size=32, pred_kind=0)
+    a = scan_search(plain, cfg, wl.queries, wl.spec)
+    b = scan_search(eng, cfg, wl.queries, wl.spec)
+    assert np.array_equal(np.asarray(a.res_dist), np.asarray(b.res_dist))
+    assert np.array_equal(np.asarray(a.res_idx), np.asarray(b.res_idx))
+    assert np.array_equal(np.asarray(a.cnt), np.asarray(b.cnt))
+
+
+def test_probe_resume_parity(shard_ds):
+    """probe → resume on the sharded engine == one direct search at the
+    final budget (the resume-exactness contract, now across shards)."""
+    ds, wl = shard_ds
+    eng = ShardedSearchEngine.build(ds, _sg2(ds), mesh=None)
+    cfg = SearchConfig(k=5, queue_size=32, pred_kind=0)
+    direct = eng.search(cfg, wl.queries, wl.spec, 400)
+    st = eng.search(cfg, wl.queries, wl.spec, 60)
+    st = eng.search(cfg, wl.queries, wl.spec, 400, state=st)
+    for f in ("res_idx", "res_dist", "cnt", "cand_idx"):
+        assert np.array_equal(np.asarray(getattr(direct, f)),
+                              np.asarray(getattr(st, f))), f
+
+
+# ----------------------------------------------------------------- tiering ----
+
+def test_host_tier_rerank_bitwise_matches_device_tier(shard_ds):
+    """Same compressed traversal + same exact float32 rerank whether the
+    rerank vectors live on device or in host memory."""
+    ds, wl = shard_ds
+    qcfg = {"train_sample_size": 256}
+    cfg = SearchConfig(k=5, queue_size=32, pred_kind=0)
+    outs = {}
+    for tier in ("device", "host"):
+        eng = ShardedSearchEngine.build(
+            ds, _sg2(ds), mesh=None, precision="int8",
+            quant_cfg=dict(qcfg), tier=tier)
+        st = eng.search(cfg, wl.queries, wl.spec, 300)
+        outs[tier] = eng.rerank(cfg, wl.queries, st)
+    for f in ("res_idx", "res_dist"):
+        assert np.array_equal(np.asarray(getattr(outs["device"], f)),
+                              np.asarray(getattr(outs["host"], f))), f
+
+
+def test_float32_traversal_on_compressed_engine_raises(shard_ds):
+    ds, _ = shard_ds
+    eng = ShardedSearchEngine.build(
+        ds, _sg2(ds), mesh=None, precision="int8",
+        quant_cfg={"train_sample_size": 256}, tier="host")
+    wl = make_label_workload(ds, batch=4, kind="contain", seed=1)
+    cfg = SearchConfig(k=5, queue_size=32, pred_kind=0, precision="float32")
+    with pytest.raises(ValueError, match="float32 traversal"):
+        eng.search(cfg, wl.queries, wl.spec, 100)
+
+
+# -------------------------------------------------- e2e / planner / serve ----
+
+def test_e2e_planner_serve_on_sharded_engine(shard_ds):
+    """The adaptive pipeline runs unchanged on a sharded engine: training
+    data, estimator fit, e2e_search with EXPLAIN, planner routing, and the
+    serving scheduler's shard-layout telemetry."""
+    from repro.core.e2e import e2e_search
+    from repro.core.estimator import CostEstimator
+    from repro.core.training import generate_training_data
+    from repro.serve.scheduler import CostAwareScheduler, ServeConfig
+
+    ds, wl = shard_ds
+    eng = ShardedSearchEngine.build(ds, _sg2(ds), mesh=None)
+    assert eng.n_shards == 2 and eng.is_sharded
+    cfg = SearchConfig(k=5, queue_size=32, pred_kind=0)
+    td = generate_training_data(eng, ds, wl, cfg, probe_budget=32, chunk=16)
+    assert td.features.shape[0] == wl.batch
+    est = CostEstimator.fit(td.features, td.w_q, n_trees=8, depth=3)
+    res = e2e_search(eng, est, cfg, wl.queries, wl.spec, probe_budget=32,
+                     explain=True)
+    assert res.state.res_idx.shape == (wl.batch, cfg.k)
+    assert len(res.reports) == wl.batch
+    # NDC accounting stays exact under sharding: merged cnt covers the
+    # granted budget for every budget-terminated lane
+    cnt = np.asarray(res.state.cnt)
+    bud = np.asarray(res.predicted_budget)
+    active = np.asarray(res.state.active)
+    assert np.all(cnt >= 1)
+    # a lane still active after the resume stopped on its budget, and the
+    # merged NDC must show that (per-shard splits sum back to >= W)
+    assert np.all(cnt[active] >= bud[active])
+
+    sched = CostAwareScheduler(eng, est, cfg, ServeConfig(lane_width=4))
+    assert sched.summary()["n_shards"] == 2
+
+    # planner stage-0 inputs route through the sharded delegation: one
+    # ScanStats over the whole corpus, assembled from per-shard bitmaps
+    from repro.core.planner import scan_stats
+    stats = scan_stats(eng, eng.compile(wl.spec))
+    assert stats.n == eng.n and stats.valid.shape[1] == eng.n
+
+
+# --------------------------------------------------------------- mesh path ----
+
+def test_sharded_mesh_matches_loop_path():
+    """Forced 4-device host platform: 2-D (data × index) shard_map vs the
+    host loop over shards. Float32 is bitwise (full state + resume);
+    int8 keeps identical ids/counters with distances within 1 ulp (the
+    XLA:CPU SPMD FMA-contraction caveat in core/sharded.py)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np
+        from repro.core import SearchConfig, ShardedSearchEngine
+        from repro.data import make_dataset, make_label_workload
+
+        ds = make_dataset(n=512, dim=8, n_clusters=4, alphabet_size=16, seed=0)
+        wl = make_label_workload(ds, batch=6, kind="contain", seed=3)
+        cfg = SearchConfig(k=5, queue_size=32, pred_kind=0)
+
+        from repro.index.builder import build_sharded_graph_index
+        sg = build_sharded_graph_index(np.asarray(ds.vectors), 2, degree=8, seed=0)
+        loop = ShardedSearchEngine.build(ds, sg, mesh=None)
+        mesh = ShardedSearchEngine.build(ds, sg, mesh="auto")
+        assert mesh.mesh is not None and dict(mesh.mesh.shape)["index"] == 2
+        a = loop.search(cfg, wl.queries, wl.spec, 300)
+        b = mesh.search(cfg, wl.queries, wl.spec, 300)
+        for f in ("res_idx", "res_dist", "cnt", "cand_idx", "cand_dist",
+                  "d_start", "n_inspected", "visited"):
+            assert np.array_equal(np.asarray(getattr(a, f)),
+                                  np.asarray(getattr(b, f))), f
+        s1 = mesh.search(cfg, wl.queries, wl.spec, 80)
+        s1 = mesh.search(cfg, wl.queries, wl.spec, 300, state=s1)
+        assert np.array_equal(np.asarray(a.res_idx), np.asarray(s1.res_idx))
+        assert np.array_equal(np.asarray(a.cnt), np.asarray(s1.cnt))
+
+        qc = {"train_sample_size": 256}
+        lq = ShardedSearchEngine.build(ds, sg, mesh=None, precision="int8",
+                                       quant_cfg=dict(qc))
+        mq = ShardedSearchEngine.build(ds, sg, mesh="auto", precision="int8",
+                                       quant_cfg=dict(qc))
+        c = lq.search(cfg, wl.queries, wl.spec, 300)
+        d = mq.search(cfg, wl.queries, wl.spec, 300)
+        for f in ("res_idx", "cand_idx", "cnt", "n_inspected", "hops"):
+            assert np.array_equal(np.asarray(getattr(c, f)),
+                                  np.asarray(getattr(d, f))), f
+        for f in ("res_dist", "cand_dist"):
+            x, y = np.asarray(getattr(c, f)), np.asarray(getattr(d, f))
+            fin = np.isfinite(x)
+            assert np.array_equal(fin, np.isfinite(y)), f
+            assert np.all(np.abs(x[fin] - y[fin]) <= np.spacing(x[fin])), f
+        print("OK")
+    """)
+    r = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=1200,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "JAX_PLATFORMS": "cpu"})
+    assert "OK" in r.stdout, r.stderr
