@@ -191,6 +191,22 @@ def main():
                              probe_budget=96, alpha=1.5, explain=True)
         print("-- planned_search (auto routing)")
         print(format_reports(res.reports))
+        # on an index-axis-sharded engine the same report grows a per-shard
+        # section: each shard's NDC/hops/termination at its ⌈W/S⌉ budget
+        # slice (the per-shard numbers sum exactly to the merged counters
+        # above them), plus the merge topology and a work-balance index
+        from repro.core.sharded import ShardedSearchEngine
+        from repro.index.builder import build_sharded_graph_index
+
+        sgraph = build_sharded_graph_index(np.asarray(ds.vectors), 2,
+                                           degree=24, seed=0)
+        eng_s = ShardedSearchEngine.build(ds, sgraph, backend=args.backend,
+                                          mesh=None,
+                                          precision=args.precision)
+        rs = e2e_search(eng_s, est, cfg, wl_x.queries, wl_x.spec,
+                        probe_budget=96, alpha=1.5, explain=True)
+        print("-- e2e_search on a 2-shard engine (per-shard attribution)")
+        print(format_reports(rs.reports[:2]))
 
 
 if __name__ == "__main__":

@@ -75,7 +75,10 @@ SPECS = {
     "obs": dict(
         module="benchmarks.obs_bench",
         headline=("overhead.total_ratio", "lower"),
-        booleans=("results_bit_identical", "prometheus.valid"),
+        booleans=("results_bit_identical", "prometheus.valid",
+                  "sharded.bit_identical", "sharded.sections_sum_exact",
+                  "sharded.zero_added_dispatches",
+                  "drift.quiet_on_stationary", "drift.alarm_on_shift"),
         protocol="protocol",
         scale_keys=("requests", "corpus", "lane_width", "probe_budget",
                     "quick"),

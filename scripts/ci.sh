@@ -25,6 +25,7 @@ CHUNKS=(
   "tests/test_planner.py"
   "tests/test_persistent.py"
   "tests/test_obs.py"
+  "tests/test_obs_shard.py"
   "tests/test_distributed.py"
   "tests/test_shard.py"
   "tests/test_models_smoke.py tests/test_dryrun_small.py"
@@ -46,6 +47,14 @@ done
 echo "=== serve smoke ==="
 python -m repro.launch.serve --requests 8 --batch 4 \
   --corpus 2000 --train-queries 64 --explain 2 --prometheus || fail=1
+
+# Sharded serving smoke: the same launcher on a 2-shard engine with the
+# health surface — per-shard EXPLAIN attribution, shard skew gauges in the
+# scrape, and the --status structured JSON report.
+echo "=== serve smoke (sharded + status) ==="
+python -m repro.launch.serve --requests 8 --batch 4 \
+  --corpus 2000 --train-queries 64 --explain 2 --prometheus \
+  --shards 2 --status || fail=1
 
 # EXPLAIN smoke: the quickstart's per-query lifecycle reports across all
 # three backends (dense / pallas / pallas_persistent) plus planner routing.

@@ -242,6 +242,10 @@ def e2e_search(
             probe_ndc=probe_cnt, features=np.asarray(feats),
             trace_ids=[f"{trace_id or 'e2e'}:{i}" for i in range(b)],
             stages=stages)
+        if getattr(state, "shard", None) is not None:
+            from repro.obs.shard import attach_shard_sections
+
+            attach_shard_sections(reports, cfg, state, bud)
 
     return E2EResult(
         state=state,

@@ -418,11 +418,18 @@ def _plan_reports(engine, cfg, state, plan, pred, pre_probe, probe_ndc,
         cfg, state, pred, backend=backend_name, plans=names,
         probe_ndc=probe_ndc, trace_ids=[f"{trace_id or 'plan'}:{i}"
                                         for i in range(b)], stages=stages)
+    if getattr(state, "shard", None) is not None:
+        from repro.obs.shard import attach_shard_sections
+
+        attach_shard_sections(reports, cfg, state, pred)
     # scan lanes terminate by construction (the masked scan is exhaustive
-    # over the σ·N valid rows), not by any traversal stop condition
+    # over the σ·N valid rows), not by any traversal stop condition —
+    # globally and on every shard's slice of the bitmap
     for i, r in enumerate(reports):
         if plan[i] == PLAN_SCAN:
             r.termination = "scan-exhaustive"
+            for sec in r.shards:
+                sec.termination = "scan-exhaustive"
     return reports
 
 

@@ -78,7 +78,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.search import SearchConfig, SearchState, run_search_impl
 from repro.core.state import pad_lanes, stack_shards, take_shard
 from repro.data.synthetic import AttributedDataset
-from repro.distributed.merge import butterfly_merge, merge_stacked
+from repro.distributed.merge import butterfly_merge, merge_plan, merge_stacked
+from repro.obs.trace import as_tracer
 from repro.distributed.sharding import INDEX_AXIS, search_mesh_2d
 from repro.filters.compile import FilterProgram, as_program
 from repro.index.graph import ShardedGraphIndex
@@ -461,17 +462,30 @@ class ShardedSearchEngine:
         # budget-terminated query is still visible as cnt ≥ W to EXPLAIN
         sbud = (budgets + jnp.int32(s - 1)) // jnp.int32(s)
         gt = None if gt_dist is None else jnp.asarray(gt_dist, jnp.float32)
+        tr = as_tracer(tracer)
         if self.mesh is None:
+            # spans wrap host dispatches that exist regardless of tracing
+            # (per-shard engine.search calls, the one merge jit call) with
+            # static int attrs — no device reads, so the PR-7 zero-added-
+            # dispatch / bit-identity contract holds on sharded engines too
             outs = []
             for i, eng in enumerate(self.shards):
                 st = None if state is None else take_shard(state.shard, i)
-                outs.append(eng.search(
-                    cfg, q, prog, sbud, state=st, gt_dist=gt, tracer=tracer,
-                    trace_id=f"{trace_id}/s{i}" if trace_id else ""))
-            stacked = stack_shards(outs)
-            merged = merge_shard_states(stacked, self.offsets)
+                with tr.span("shard-search", trace_id, shard=i, n_shards=s):
+                    outs.append(eng.search(
+                        cfg, q, prog, sbud, state=st, gt_dist=gt,
+                        tracer=tracer,
+                        trace_id=f"{trace_id}/s{i}" if trace_id else ""))
+            pairwise, depth = merge_plan(s)
+            with tr.span("shard-merge", trace_id, n_shards=s,
+                         pairwise=pairwise, depth=depth, path="loop"):
+                stacked = stack_shards(outs)
+                merged = merge_shard_states(stacked, self.offsets)
             return ShardedSearchState(shard=stacked, merged=merged)
-        return self._search_mesh(cfg, q, prog, sbud, state, gt)
+        pairwise, depth = merge_plan(s)
+        with tr.span("shard-search", trace_id, shard=-1, n_shards=s,
+                     pairwise=pairwise, depth=depth, path="mesh"):
+            return self._search_mesh(cfg, q, prog, sbud, state, gt)
 
     # ------------------------------------------------------ mesh path ------
     def _stacked_arrays(self) -> dict:

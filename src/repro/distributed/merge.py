@@ -39,6 +39,17 @@ INF = jnp.float32(jnp.inf)
 PAD_POS = jnp.int32(2**31 - 1)
 
 
+def merge_plan(n_shards: int) -> tuple[int, int]:
+    """(pairwise merges, tree depth) for an S-way cross-shard reduction.
+
+    The host tree in `merge_stacked` and the device butterfly both perform
+    S−1 pairwise pool merges over ⌈log2 S⌉ rounds — the numbers EXPLAIN
+    attributes to the merge stage. S ≤ 1 merges nothing: (0, 0)."""
+    if n_shards <= 1:
+        return 0, 0
+    return n_shards - 1, (n_shards - 1).bit_length()
+
+
 def pool_positions(width: int, shard0, n_shards: int, b: int):
     """Position lanes [B, n_shards, width] for pools of global shard ids
     shard0 … shard0+n_shards-1: pos = global_shard · width + slot.

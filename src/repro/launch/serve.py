@@ -26,13 +26,16 @@ import numpy as np
 
 def build_world(corpus: int, train_queries: int, queue_size: int, k: int,
                 probe: int, backend: str | None, seed: int = 0,
-                precision: str = "float32"):
+                precision: str = "float32", n_shards: int = 1):
     """Index + graph + engine + a single estimator trained on a *mixed*
     contain/range workload (features are predicate-agnostic, so one GBDT
     serves both request kinds). `precision` deploys the engine with a
     compressed vector store (int8 / pq) — the estimator is then trained on
     the same engine, so its cost model sees compressed-domain probes, and
-    the scheduler reranks every finished lane with exact float32."""
+    the scheduler reranks every finished lane with exact float32.
+    `n_shards > 1` deploys an index-axis-sharded engine (core.sharded)
+    with one independent graph per corpus slice; the estimator is trained
+    on that same sharded engine, so it models the ⌈W/S⌉-split cost."""
     import dataclasses
 
     from repro.core import (CostEstimator, SearchConfig, SearchEngine,
@@ -41,11 +44,23 @@ def build_world(corpus: int, train_queries: int, queue_size: int, k: int,
     from repro.filters.predicates import PRED_CONTAIN, PRED_RANGE
     from repro.index import build_graph_index
 
+    # equal contiguous slices require S | N
+    corpus = -(-corpus // max(n_shards, 1)) * max(n_shards, 1)
     ds = make_dataset(n=corpus, dim=48, n_clusters=16, alphabet_size=48,
                       seed=seed)
-    graph = build_graph_index(ds.vectors, degree=24, seed=seed)
-    engine = SearchEngine.build(ds, graph, backend=backend,
-                                precision=precision)
+    if n_shards > 1:
+        from repro.core.sharded import ShardedSearchEngine
+        from repro.index.builder import build_sharded_graph_index
+
+        sgraph = build_sharded_graph_index(np.asarray(ds.vectors), n_shards,
+                                           degree=24, seed=seed)
+        graph = sgraph
+        engine = ShardedSearchEngine.build(ds, sgraph, backend=backend,
+                                           mesh=None, precision=precision)
+    else:
+        graph = build_graph_index(ds.vectors, degree=24, seed=seed)
+        engine = SearchEngine.build(ds, graph, backend=backend,
+                                    precision=precision)
     cfg = SearchConfig(k=k, queue_size=queue_size, pred_kind=PRED_CONTAIN)
 
     half = train_queries // 2
@@ -109,6 +124,15 @@ def main():
                     choices=["float32", "int8", "pq"],
                     help="engine vector-store precision: compressed-domain "
                          "traversal + exact float32 rerank on completion")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="index-axis shards (>1 deploys core.sharded: "
+                         "per-shard traversal at ceil(W/S) budgets + "
+                         "cross-shard merge; per-shard skew telemetry "
+                         "shows up in --status and --prometheus)")
+    ap.add_argument("--status", action="store_true",
+                    help="print the structured JSON health report (queue, "
+                         "shard skew, calibration, drift alarms) after "
+                         "the run")
     ap.add_argument("--explain", type=int, default=0, metavar="N",
                     help="trace request lifecycles and print the first N "
                          "served timelines (admit → probe → resume slices "
@@ -127,7 +151,10 @@ def main():
     ds, graph, engine, cfg, est = build_world(
         args.corpus, args.train_queries, args.queue_size, args.k, args.probe,
         backend=os.environ.get("REPRO_BACKEND", "pallas"),
-        precision=args.precision)
+        precision=args.precision, n_shards=args.shards)
+    if args.shards > 1:
+        print(f"   index-axis sharded: {engine.n_shards} shards x "
+              f"{engine.shard_size} rows")
     if args.precision != "float32":
         from repro.quant import store_ratio
 
@@ -194,6 +221,12 @@ def main():
                       f"{sp.name}{t}{extras}")
     if tracer is not None:
         tracer.close()
+
+    if args.status:
+        import json
+
+        print("== serving health")
+        print(json.dumps(sched.status(), indent=2, sort_keys=True))
 
     if args.prometheus:
         print("== prometheus scrape")

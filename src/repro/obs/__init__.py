@@ -1,29 +1,43 @@
 """Observability: lifecycle tracing, calibration telemetry, export, EXPLAIN.
 
-Four pieces, all strictly outside the jitted hot path:
+Six pieces, all strictly outside the jitted hot path:
 
   trace        `Tracer` — trace IDs + spans at host dispatch boundaries
-               (bounded ring, optional JSONL sink); `NO_TRACE` no-op.
+               (bounded ring, bounded+rotating JSONL sink); `NO_TRACE`
+               no-op.
   calibration  `CalibrationMonitor` — the frozen per-query
                (features, Ŵ_q, actual NDC, plan, recall) log the online
                recalibration work trains from.
+  drift        `DriftMonitor` — rolling-window PSI / log-RMSE / win-rate
+               drift detection over the calibration log; its alarm is the
+               trigger signal for the future recalibration trainer.
   export       `prometheus_text` / `validate_prometheus` — exposition-
-               format scrape over ServeMetrics + calibration reports.
+               format scrape over ServeMetrics + calibration + drift
+               reports.
   explain      `QueryReport` / `termination_reasons` — per-query EXPLAIN
                surface for `e2e_search` / `planned_search`.
+  shard        `ShardSection` / `attach_shard_sections` — per-shard
+               EXPLAIN attribution whose counters sum exactly to the
+               merged ones (the PR-8 accounting contract).
 """
 from repro.obs.calibration import (PLAN_NAMES, RECORD_FIELDS, SCHEMA_VERSION,
                                    CalibrationMonitor)
+from repro.obs.drift import DriftConfig, DriftMonitor, psi
 from repro.obs.explain import (QueryReport, StageReport, build_reports,
                                feature_dict, format_reports,
                                termination_reasons)
 from repro.obs.export import prometheus_text, validate_prometheus
+from repro.obs.shard import (ShardSection, attach_shard_sections,
+                             build_shard_sections, work_balance)
 from repro.obs.trace import (NO_TRACE, NullTracer, Span, Tracer, as_tracer)
 
 __all__ = [
     "CalibrationMonitor", "PLAN_NAMES", "RECORD_FIELDS", "SCHEMA_VERSION",
+    "DriftConfig", "DriftMonitor", "psi",
     "QueryReport", "StageReport", "build_reports", "feature_dict",
     "format_reports", "termination_reasons",
     "prometheus_text", "validate_prometheus",
+    "ShardSection", "attach_shard_sections", "build_shard_sections",
+    "work_balance",
     "NO_TRACE", "NullTracer", "Span", "Tracer", "as_tracer",
 ]

@@ -67,10 +67,12 @@ def _esc(v) -> str:
 
 
 def prometheus_text(summary: dict, calibration: dict | None = None,
+                    drift: dict | None = None,
                     prefix: str = "repro") -> str:
-    """Serialize a serving summary (+ optional calibration report) as one
-    Prometheus scrape. Pure function of its dict inputs — callers decide
-    when a scrape happens, nothing here touches the scheduler."""
+    """Serialize a serving summary (+ optional calibration report and
+    drift report) as one Prometheus scrape. Pure function of its dict
+    inputs — callers decide when a scrape happens, nothing here touches
+    the scheduler."""
     w = _Writer(prefix)
 
     w.counter("requests_completed_total", summary.get("n_completed", 0),
@@ -128,6 +130,27 @@ def prometheus_text(summary: dict, calibration: dict | None = None,
         w.gauge("phase_early_exit_frac", d.get("early_exit_frac", 0.0),
                 "lane-weighted early-exit fraction per phase", lab)
 
+    # per-shard work/skew telemetry (sharded engines only) — the inputs
+    # ROADMAP's skew-aware budget routing will consume
+    shards = summary.get("shards")
+    if shards:
+        w.gauge("shards", shards.get("n_shards", 1),
+                "index-axis shards behind the engine")
+        for s, v in enumerate(shards.get("ndc_by_shard", [])):
+            w.counter("shard_ndc_total", v,
+                      "distance computations attributed per shard",
+                      {"shard": str(s)})
+        for s, v in enumerate(shards.get("bitmap_by_shard", [])):
+            w.counter("shard_bitmap_count_total", v,
+                      "filter-bitmap valid rows observed per shard",
+                      {"shard": str(s)})
+        w.gauge("shard_ndc_skew", shards.get("ndc_skew", 1.0),
+                "max/mean per-shard NDC (1.0 = perfectly balanced)")
+        w.gauge("shard_bitmap_skew", shards.get("bitmap_skew", 1.0),
+                "max/mean per-shard filter-bitmap count")
+        w.gauge("shard_work_balance", shards.get("work_balance", 1.0),
+                "total NDC / (S * max shard NDC); 1.0 = balanced")
+
     cache = summary.get("cache")
     if cache:
         w.counter("cache_hits_total", cache.get("hits", 0),
@@ -170,6 +193,31 @@ def prometheus_text(summary: dict, calibration: dict | None = None,
                     "fraction delivered within predicted budget", lab)
             w.gauge("plan_mean_actual_ndc", d.get("mean_actual_ndc", 0.0),
                     "mean actual NDC per plan", lab)
+
+    if drift is not None:
+        w.gauge("drift_ready", 1.0 if drift.get("ready") else 0.0,
+                "1 once the drift reference window is frozen")
+        w.gauge("drift_alarm", 1.0 if drift.get("alarm") else 0.0,
+                "1 while any drift detector is alarming (the "
+                "recalibration trigger)")
+        for kind, on in sorted(drift.get("alarms", {}).items()):
+            w.gauge("drift_alarm_detail", 1.0 if on else 0.0,
+                    "per-detector alarm state", {"kind": kind})
+        w.gauge("drift_n_ref", drift.get("n_ref", 0),
+                "rows in the frozen drift reference window")
+        w.gauge("drift_n_cur", drift.get("n_cur", 0),
+                "rows in the current drift window")
+        w.gauge("drift_psi_max", drift.get("psi_max", 0.0),
+                "max per-feature PSI, current vs reference window")
+        w.gauge("drift_psi_mean", drift.get("psi_mean", 0.0),
+                "mean per-feature PSI")
+        w.gauge("drift_log_rmse_ref", drift.get("log_rmse_ref", 0.0),
+                "estimator log-RMSE over the reference window")
+        w.gauge("drift_log_rmse_cur", drift.get("log_rmse_cur", 0.0),
+                "estimator log-RMSE over the current window")
+        w.gauge("drift_win_rate_shift_max",
+                drift.get("win_rate_shift_max", 0.0),
+                "max per-plan |win-rate shift| among judged plans")
 
     return w.text()
 

@@ -1,0 +1,126 @@
+"""Per-shard EXPLAIN attribution for index-axis-sharded searches.
+
+A `ShardedSearchState` (core.sharded) carries two views of every query:
+the merged global view all consumers read, and the per-shard carries
+`state.shard` ([B, S, ...] leaves) the merge was reduced FROM. The merged
+counters are exact integer sums over that stacked axis (the PR-8
+accounting contract), so per-shard attribution built here is *exact by
+construction*: for every lane,
+
+    sum_s section[s].ndc          == merged cnt
+    sum_s section[s].hops         == merged hops
+    sum_s section[s].n_inspected  == merged n_inspected
+    sum_s section[s].n_clause_valid[c] == merged n_clause_valid[c]
+
+— no re-derivation, no sampling; the sections read the same stacked
+arrays `merge_shard_states` summed. Everything is host post-processing of
+the final carry (one device→host copy of the small counter leaves), the
+same cost class as the rest of EXPLAIN.
+
+Per-shard termination reuses `obs.explain.termination_reasons` on each
+shard's slice of the carry, judged against the per-shard budget ⌈W/S⌉ the
+shard actually ran under (core.sharded splits the global budget exactly
+this way). The merge topology is reported from `distributed.merge`'s
+structure: S pools reduce through S−1 pairwise merges in ⌈log2 S⌉ rounds
+(the host tree and the device butterfly share both numbers).
+
+The work-balance index is the shard_bench efficiency quantity,
+
+    balance = total NDC / (S · max_s shard NDC)   ∈ (0, 1]
+
+1.0 means every shard spent the same budget; a selectivity-skewed filter
+that concentrates valid rows in one shard drives it toward 1/S — the
+telemetry ROADMAP's skew-aware budget routing will act on.
+"""
+from __future__ import annotations
+
+import dataclasses
+from types import SimpleNamespace
+
+import numpy as np
+
+from repro.distributed.merge import merge_plan
+from repro.obs.explain import termination_reasons
+
+
+@dataclasses.dataclass
+class ShardSection:
+    """One shard's slice of one query's execution."""
+
+    shard: int                 # shard index (global row offset order)
+    budget: int                # the ⌈W/S⌉ slice this shard ran under
+    ndc: int                   # per-shard NDC (sums exactly to merged cnt)
+    hops: int                  # per-shard expansions
+    n_inspected: int           # per-shard neighbor inspections
+    termination: str           # obs.explain reason, judged at `budget`
+    n_clause_valid: list = dataclasses.field(default_factory=list)
+
+
+def shard_budgets(budgets, n_shards: int) -> np.ndarray:
+    """Per-shard budget slices ⌈W/S⌉ [B] — mirrors core.sharded.search."""
+    b = np.asarray(budgets, np.int64)
+    return (b + n_shards - 1) // n_shards
+
+
+def work_balance(shard_ndc: np.ndarray) -> np.ndarray:
+    """[B] balance index from per-shard NDC [B, S]: total/(S·max), 1.0 for
+    lanes that spent nothing anywhere (nothing to balance)."""
+    shard_ndc = np.asarray(shard_ndc, np.float64)
+    s = shard_ndc.shape[1]
+    mx = shard_ndc.max(axis=1)
+    tot = shard_ndc.sum(axis=1)
+    return np.where(mx > 0, tot / np.maximum(s * mx, 1.0), 1.0)
+
+
+def build_shard_sections(cfg, state, budgets) -> list[list[ShardSection]]:
+    """[B][S] sections from a ShardedSearchState's per-shard carries.
+
+    `budgets` is the *global* per-lane budget [B] (or scalar) the sharded
+    search ran with — sections judge termination at its ⌈W/S⌉ slice.
+    """
+    sh = state.shard
+    cnt = np.asarray(sh.cnt)              # [B, S]
+    hops = np.asarray(sh.hops)
+    insp = np.asarray(sh.n_inspected)
+    clause = np.asarray(sh.n_clause_valid)  # [B, S, C]
+    cand_dist = np.asarray(sh.cand_dist)
+    cand_idx = np.asarray(sh.cand_idx)
+    cand_exp = np.asarray(sh.cand_exp)
+    res_dist = np.asarray(sh.res_dist)
+    b, s = cnt.shape
+    sbud = np.broadcast_to(shard_budgets(budgets, s), (b,))
+
+    sections: list[list[ShardSection]] = [[] for _ in range(b)]
+    for j in range(s):
+        # duck-typed per-shard carry slice — termination_reasons only reads
+        # these five fields, all already on the host
+        sub = SimpleNamespace(cand_dist=cand_dist[:, j],
+                              cand_idx=cand_idx[:, j],
+                              cand_exp=cand_exp[:, j],
+                              res_dist=res_dist[:, j], cnt=cnt[:, j])
+        terms = termination_reasons(cfg, sub, sbud)
+        for i in range(b):
+            sections[i].append(ShardSection(
+                shard=j, budget=int(sbud[i]), ndc=int(cnt[i, j]),
+                hops=int(hops[i, j]), n_inspected=int(insp[i, j]),
+                termination=terms[i],
+                n_clause_valid=[int(v) for v in clause[i, j]]))
+    return sections
+
+
+def attach_shard_sections(reports, cfg, state, budgets) -> list:
+    """Mutate `reports` (obs.explain.QueryReport list) with the per-shard
+    section, merge topology and work-balance index. No-op (and returns the
+    reports untouched) when `state` has no per-shard carries."""
+    sh = getattr(state, "shard", None)
+    if sh is None:
+        return reports
+    sections = build_shard_sections(cfg, state, budgets)
+    bal = work_balance(np.asarray(sh.cnt))
+    pairwise, depth = merge_plan(len(sections[0]) if sections else 1)
+    for i, r in enumerate(reports):
+        r.shards = sections[i]
+        r.work_balance = float(bal[i])
+        r.merge_pairwise = pairwise
+        r.merge_depth = depth
+    return reports

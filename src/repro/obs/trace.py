@@ -18,7 +18,10 @@ Design constraints (pinned by tests/test_obs.py):
     must never retain a live device array (that would pin device memory
     and turn a later repr into a sync);
   * memory is bounded: spans land in a ring (`deque(maxlen=capacity)`);
-    an optional JSONL sink streams them out for offline analysis.
+    an optional JSONL sink streams them out for offline analysis. The sink
+    is bounded too — at `sink_max_bytes` the file rotates to `<path>.1`
+    (replacing any previous rotation), so total disk use stays ≤ ~2× the
+    cap no matter how long the process serves.
 
 The tracer is clock-injected like the serving scheduler: pass `clock=` to
 drive it from a virtual clock (benchmarks) or leave the default
@@ -30,6 +33,7 @@ import contextlib
 import dataclasses
 import itertools
 import json
+import os
 import time
 from collections import deque
 
@@ -37,6 +41,11 @@ import numpy as np
 
 #: ring default — ~100 B/span of attrs keeps this well under 10 MB
 DEFAULT_CAPACITY = 1 << 16
+
+#: sink default — rotate the JSONL file once it reaches 64 MB, keeping one
+#: predecessor (`<path>.1`), so a long-running serve process holds at most
+#: ~2× this on disk
+DEFAULT_SINK_MAX_BYTES = 64 << 20
 
 _SCALARS = (str, int, float, bool, type(None))
 
@@ -90,14 +99,19 @@ class Tracer:
     identical span streams (up to timestamps)."""
 
     def __init__(self, capacity: int = DEFAULT_CAPACITY,
-                 clock=time.perf_counter, sink: str | None = None):
+                 clock=time.perf_counter, sink: str | None = None,
+                 sink_max_bytes: int = DEFAULT_SINK_MAX_BYTES):
         self.capacity = capacity
         self.clock = clock
         self._ring: deque[Span] = deque(maxlen=capacity)
         self._ids = itertools.count(1)
         self.n_emitted = 0          # lifetime count (ring may have evicted)
         self._sink_path = sink
+        self.sink_max_bytes = int(sink_max_bytes)
+        self.n_rotations = 0
         self._sink = open(sink, "a") if sink else None
+        # appending to a pre-existing file: count what's already there
+        self._sink_bytes = self._sink.tell() if self._sink else 0
 
     # ------------------------------------------------------------- ids ----
     def new_trace(self, prefix: str = "q") -> str:
@@ -133,7 +147,21 @@ class Tracer:
         self._ring.append(sp)
         self.n_emitted += 1
         if self._sink is not None:
-            self._sink.write(sp.to_json() + "\n")
+            line = sp.to_json() + "\n"
+            if (self._sink_bytes > 0
+                    and self._sink_bytes + len(line) > self.sink_max_bytes):
+                self._rotate_sink()
+            self._sink.write(line)
+            self._sink_bytes += len(line)
+
+    def _rotate_sink(self) -> None:
+        """Roll the sink file to `<path>.1` and start a fresh one. A span
+        larger than the cap still lands (a file always takes ≥1 line)."""
+        self._sink.close()
+        os.replace(self._sink_path, self._sink_path + ".1")
+        self._sink = open(self._sink_path, "w")
+        self._sink_bytes = 0
+        self.n_rotations += 1
 
     # ------------------------------------------------------------ query ----
     def __len__(self) -> int:

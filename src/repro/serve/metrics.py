@@ -34,6 +34,27 @@ class ServeMetrics:
     n_batches: int = 0
     n_completed: int = 0
     busy_time: float = 0.0
+    # per-shard attribution (sharded engines only; stays None on S=1):
+    # lifetime exact counters, the telemetry ROADMAP's skew-aware budget
+    # routing will read
+    shard_ndc: np.ndarray | None = None     # [S] i64, Σ == Σ request NDC
+    shard_bitmap: np.ndarray | None = None  # [S] i64 filter-valid rows seen
+
+    def observe_shard_ndc(self, deltas) -> None:
+        """Accumulate per-shard NDC deltas [S] from one pump (already
+        summed over the batch's real lanes by the scheduler)."""
+        d = np.asarray(deltas, np.int64)
+        if self.shard_ndc is None:
+            self.shard_ndc = np.zeros(d.shape[0], np.int64)
+        self.shard_ndc += d
+
+    def observe_shard_bitmap(self, counts) -> None:
+        """Accumulate per-shard filter-bitmap popcounts [S] from one
+        compiled ScanStats observation (summed over real lanes)."""
+        c = np.asarray(counts, np.int64)
+        if self.shard_bitmap is None:
+            self.shard_bitmap = np.zeros(c.shape[0], np.int64)
+        self.shard_bitmap += c
 
     def observe_batch(self, phase: str, size: int, fill: int,
                       busy: float, steps: int = 0, launches: int = 0,
@@ -144,4 +165,27 @@ class ServeMetrics:
         if cache is not None:
             out["cache"] = dict(hits=cache.hits, misses=cache.misses,
                                 hit_rate=cache.hit_rate, entries=len(cache))
+        if self.shard_ndc is not None or self.shard_bitmap is not None:
+            out["shards"] = self._shard_summary()
         return out
+
+    def _shard_summary(self) -> dict:
+        def skew(v):
+            # max/mean ≥ 1; 1.0 means perfectly even (also the empty case)
+            if v is None or v.sum() <= 0:
+                return 1.0
+            return float(v.max() / max(v.mean(), 1e-12))
+
+        ndc = self.shard_ndc
+        bmp = self.shard_bitmap
+        s = len(ndc) if ndc is not None else len(bmp)
+        total = int(ndc.sum()) if ndc is not None else 0
+        mx = int(ndc.max()) if ndc is not None else 0
+        return dict(
+            n_shards=int(s),
+            ndc_by_shard=[] if ndc is None else [int(v) for v in ndc],
+            ndc_skew=skew(ndc),
+            bitmap_by_shard=[] if bmp is None else [int(v) for v in bmp],
+            bitmap_skew=skew(bmp),
+            work_balance=(total / (s * mx)) if mx > 0 else 1.0,
+        )

@@ -86,7 +86,7 @@ class CostAwareScheduler:
     def __init__(self, engine: SearchEngine, estimator, cfg: SearchConfig,
                  serve_cfg: ServeConfig = ServeConfig(),
                  timer=time.perf_counter, service_model=None, planner=None,
-                 tracer=None, calibration: bool = True):
+                 tracer=None, calibration: bool = True, drift=True):
         """service_model: optional callable (trip count, lane width) →
         seconds. When set, pump() charges batches by the model instead of
         the wall clock — a calibrated virtual clock that makes scheduling
@@ -111,7 +111,14 @@ class CostAwareScheduler:
         per completed non-cache-hit request into `self.calibration` (a
         `obs.CalibrationMonitor`) — the log online recalibration trains
         from. Costs one feature-matrix device→host copy per probe batch,
-        outside every launch loop."""
+        outside every launch loop.
+
+        drift: watch the calibration log with an `obs.DriftMonitor`
+        (True → default thresholds, a `DriftConfig` → custom, False →
+        off; requires calibration). `drift_report()` / `status()` /
+        `prometheus()` surface its alarm — the documented trigger for
+        the future online-recalibration trainer. The monitor only runs
+        when one of those is called: the pump path never pays for it."""
         if serve_cfg.policy not in ("direct", "escalate"):
             raise ValueError(f"unknown policy {serve_cfg.policy!r}")
         if serve_cfg.plan not in PLANS + ("auto",):
@@ -158,6 +165,7 @@ class CostAwareScheduler:
         self._n_shards = int(getattr(engine, "n_shards", 1))
         from repro.core.search import get_backend
         from repro.obs.calibration import CalibrationMonitor
+        from repro.obs.drift import DriftConfig, DriftMonitor
         from repro.obs.trace import as_tracer
         self._persistent = getattr(
             get_backend(cfg.backend or engine.backend or "dense"),
@@ -165,6 +173,10 @@ class CostAwareScheduler:
         self.tracer = tracer
         self._tr = as_tracer(tracer)
         self.calibration = CalibrationMonitor() if calibration else None
+        self.drift_monitor = None
+        if calibration and drift:
+            self.drift_monitor = DriftMonitor(
+                drift if isinstance(drift, DriftConfig) else None)
 
     def _launches0(self) -> int:
         """Persistent-driver dispatch counter snapshot (pump sites diff two
@@ -199,6 +211,36 @@ class CostAwareScheduler:
         early = (float(np.mean(lane_steps < steps))
                  if lane_steps.size and steps > 0 else 0.0)
         return launches, early
+
+    def _observe_shards(self, out, entry, n_real: int) -> None:
+        """Per-shard NDC deltas for one pump's real lanes (sharded engines
+        only). `out`/`entry` are the batch's exit/entry states; entry=None
+        means the batch started from scratch. Reads the per-shard [B, S]
+        counter the merge already computed — no new dispatch, one small
+        host copy on a batch the pump has already blocked on. Summed over
+        pumps these telescope to exactly Σ completed-request NDC (the
+        PR-8 accounting contract carried into serving telemetry)."""
+        sh = getattr(out, "shard", None)
+        if sh is None or n_real <= 0:
+            return
+        cnt = np.asarray(sh.cnt)[:n_real]              # [n_real, S]
+        if entry is not None:
+            cnt = cnt - np.asarray(entry.shard.cnt)[:n_real]
+        self.metrics.observe_shard_ndc(cnt.sum(axis=0))
+
+    def _observe_shard_bitmap(self, stats, n_real: int) -> None:
+        """Per-shard popcounts of one freshly compiled filter bitmap
+        (sharded engines only): slice the [B, N] validity mask at the
+        engine's shard offsets. Called once per ScanStats compilation, so
+        each admitted filter row is counted exactly once."""
+        if self._n_shards <= 1 or n_real <= 0:
+            return
+        ns = self.engine.shard_size
+        offs = self.engine.offsets
+        valid = np.asarray(stats.valid[:n_real])
+        counts = [int(valid[:, int(offs[s]):int(offs[s]) + ns].sum())
+                  for s in range(self._n_shards)]
+        self.metrics.observe_shard_bitmap(counts)
 
     # ------------------------------------------------------------- ingress ----
     def _key_for(self, req: Request, plan: str) -> str:
@@ -386,6 +428,7 @@ class CostAwareScheduler:
                                          scfg.ablate_filter, packed=packed)
             budgets = np.asarray(jax.block_until_ready(budgets))
         cnt = np.asarray(st.cnt)
+        self._observe_shards(st, None, len(reqs))
         res_idx, res_dist = self._final_results(
             queries, st,
             any(int(budgets[i]) <= int(cnt[i]) for i in range(len(reqs))))
@@ -436,6 +479,7 @@ class CostAwareScheduler:
         prog = self.batcher.pad_program(reqs, width)
         with self._tr.span("plan-stage0", bt, lanes=len(reqs)) as sp:
             stats = scan_stats(self.engine, prog)
+            self._observe_shard_bitmap(stats, len(reqs))
             s0 = np.asarray(stage0_scan_mask(
                 self.planner, stats, prog, scfg.alpha, scfg.min_budget,
                 scfg.max_budget, packed=self._packed_s))[: len(reqs)]
@@ -481,6 +525,7 @@ class CostAwareScheduler:
             jnp.asarray(lane_on * scfg.probe_budget), n_probes=scfg.n_probes,
             tracer=self.tracer, trace_id=bt)
         cnt = np.asarray(st.cnt)
+        self._observe_shards(st, None, len(reqs))
         counts = np.zeros(width, np.int64)
         counts[: len(reqs)] = stats.counts
         with self._tr.span("plan-select", bt, lanes=len(reqs)):
@@ -554,6 +599,7 @@ class CostAwareScheduler:
         pad = width - len(reqs)
         if stats is None:
             stats = scan_stats(self.engine, prog)  # pads match nothing
+            self._observe_shard_bitmap(stats, len(reqs))
         elif pad:
             stats = ScanStats(
                 valid=np.pad(stats.valid, ((0, pad), (0, 0))),
@@ -569,6 +615,7 @@ class CostAwareScheduler:
             jax.block_until_ready(st.res_dist)
         res_idx, res_dist = self._final_results(queries, st, True)
         cnt = np.asarray(st.cnt)
+        self._observe_shards(st, base, len(reqs))
         # scan has no lockstep trips; charge the service model the
         # distance-equivalent count (σ·N work / the per-trip lane degree)
         steps = int(np.ceil(stats.counts.max(initial=0)
@@ -620,6 +667,7 @@ class CostAwareScheduler:
             queries, out,
             cap is None or any(r.budget <= cap for r in reqs))
         cnt = np.asarray(out.cnt)
+        self._observe_shards(out, state, len(reqs))
         targets = np.asarray(budgets)
         busy = (self.timer() - t0 if self.service_model is None
                 else self.service_model(steps, width))
@@ -687,10 +735,39 @@ class CostAwareScheduler:
         return (None if self.calibration is None
                 else self.calibration.report())
 
+    def drift_report(self) -> dict | None:
+        """Current drift-monitor state against the calibration log (None
+        when drift monitoring is off). Freezes the reference window on the
+        first call that sees ≥ min_ref records — the analysis runs here,
+        at poll/scrape cadence, never inside a pump."""
+        if self.drift_monitor is None or self.calibration is None:
+            return None
+        return self.drift_monitor.observe(self.calibration)
+
+    def status(self) -> dict:
+        """The serving health surface: one structured, JSON-serializable
+        report unifying queue/admission state, the metrics summary (incl.
+        the per-shard skew block on sharded engines), calibration health
+        and the drift-alarm state. `healthy` is the single pager bit:
+        False exactly while a drift detector alarms."""
+        drift = self.drift_report()
+        return dict(
+            healthy=drift is None or not drift["alarm"],
+            queue=dict(depth=self.depth(),
+                       ingress=len(self.ingress),
+                       bucketed=self.batcher.depth(),
+                       capacity=self.ingress.capacity,
+                       shed=int(self.ingress.n_shed),
+                       expired=int(self.ingress.n_expired)),
+            summary=self.summary(),
+            calibration=self.calibration_report(),
+            drift=drift,
+        )
+
     def prometheus(self, prefix: str = "repro") -> str:
         """One Prometheus-text-format scrape over the serving summary and
-        (when enabled) the calibration report."""
+        (when enabled) the calibration and drift reports."""
         from repro.obs.export import prometheus_text
 
         return prometheus_text(self.summary(), self.calibration_report(),
-                               prefix=prefix)
+                               self.drift_report(), prefix=prefix)

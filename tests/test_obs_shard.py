@@ -1,0 +1,412 @@
+"""Shard-aware observability: the per-shard EXPLAIN sum invariant (every
+per-shard counter sums exactly to its merged counterpart, all shard counts
+× plans), tracing bit-identity with zero added dispatches on *sharded*
+engines (PR 7 pinned only dense + persistent unsharded), drift-monitor
+alarm math against hand-computed PSI / log-RMSE on an injected shift,
+trace-sink rotation bounds, and the scheduler's per-shard NDC / bitmap
+telemetry + health surface."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.core import CostEstimator, SearchConfig, SearchEngine, e2e_search
+from repro.core.features import FEATURE_NAMES
+from repro.core.planner import Planner, planned_search
+from repro.core.search import dispatch_counters
+from repro.core.sharded import ShardedSearchEngine
+from repro.data import make_dataset, make_label_workload
+from repro.distributed.merge import merge_plan
+from repro.filters.predicates import PRED_CONTAIN
+from repro.index.builder import build_graph_index, build_sharded_graph_index
+from repro.obs import (CalibrationMonitor, DriftConfig, DriftMonitor, Tracer,
+                       prometheus_text, psi, validate_prometheus)
+from repro.obs.shard import build_shard_sections, shard_budgets, work_balance
+from repro.serve import CostAwareScheduler, ServeConfig, requests_from_workload
+
+F = 2 * len(FEATURE_NAMES)
+
+
+# ---------------------------------------------------------- merge plan ----
+def test_merge_plan_closed_form():
+    assert merge_plan(1) == (0, 0)
+    assert merge_plan(2) == (1, 1)
+    assert merge_plan(4) == (3, 2)
+    assert merge_plan(5) == (4, 3)
+    assert merge_plan(8) == (7, 3)
+
+
+def test_shard_budgets_and_balance():
+    np.testing.assert_array_equal(shard_budgets(np.array([300, 301]), 2),
+                                  [150, 151])
+    bal = work_balance(np.array([[100, 100], [200, 0], [0, 0]]))
+    np.testing.assert_allclose(bal, [1.0, 0.5, 1.0])
+
+
+# ----------------------------------------------------------------- psi ----
+def test_psi_hand_computed():
+    # 2 bins at the reference median: ref (0.5, 0.5) vs cur (0.9, 0.1)
+    # psi = 0.4·ln(0.9/0.5) − 0.4·ln(0.1/0.5)
+    expect = 0.4 * np.log(0.9 / 0.5) - 0.4 * np.log(0.1 / 0.5)
+    got = psi([0.0] * 50 + [1.0] * 50, [0.0] * 90 + [1.0] * 10, bins=2)
+    np.testing.assert_allclose(got, expect, rtol=1e-6)
+    # identical windows → 0; empty / single-valued reference → 0
+    rng = np.random.default_rng(0)
+    v = rng.normal(size=500)
+    assert psi(v, v) == pytest.approx(0.0, abs=1e-9)
+    assert psi([], [1.0]) == 0.0
+    assert psi(v, []) == 0.0
+    # single-valued reference has no usable quantile edges → 0 by design
+    assert psi(np.zeros(100), np.ones(100) * 5) == 0.0
+    # far-shifted current → large but finite (clip floor)
+    shifted = psi(v, v + 5.0)
+    assert 1.0 < shifted < np.inf
+
+
+# ------------------------------------------------------------- fixture ----
+@pytest.fixture(scope="module")
+def world():
+    ds = make_dataset(n=512, dim=8, n_clusters=4, alphabet_size=16, seed=0)
+    cfg = SearchConfig(k=5, queue_size=32, pred_kind=PRED_CONTAIN)
+    graph = build_graph_index(ds.vectors, degree=8, seed=0)
+    engines = {1: SearchEngine.build(ds, graph, backend="dense")}
+    for s in (2, 4):
+        g = build_sharded_graph_index(np.asarray(ds.vectors), s, degree=8,
+                                      seed=0)
+        engines[s] = ShardedSearchEngine.build(ds, g, backend="dense",
+                                               mesh=None)
+    # constant-label heads: these tests pin accounting plumbing, not
+    # prediction quality, so a trivial forest predicting ~300 NDC is enough
+    rng = np.random.default_rng(0)
+    fit = lambda w: CostEstimator.fit(                        # noqa: E731
+        rng.normal(size=(64, w)).astype(np.float32), np.full(64, 300.0),
+        n_trees=5, depth=2)
+    est = fit(F)
+    planner = Planner(traverse=fit(F), widen=fit(F), static=fit(8))
+    return ds, cfg, engines, est, planner
+
+
+# ------------------------------------------------- sum invariant ----------
+@pytest.mark.parametrize("s", [1, 2, 4])
+def test_shard_sections_sum_invariant(world, s):
+    """Per-shard sections must sum EXACTLY to the merged counters — they
+    read the same stacked arrays the merge reduced, so equality is to the
+    integer, not approximate."""
+    ds, cfg, engines, est, _ = world
+    eng = engines[s]
+    wl = make_label_workload(ds, batch=6, kind="contain", seed=3)
+    r = e2e_search(eng, est, cfg, wl.queries, wl.spec, probe_budget=32,
+                   alpha=1.5, explain=True)
+    st = r.state
+    merged_clause = np.asarray(st.n_clause_valid)
+    for i, rep in enumerate(r.reports):
+        if s == 1:
+            assert rep.shards == [] and rep.work_balance == 1.0
+            assert (rep.merge_pairwise, rep.merge_depth) == (0, 0)
+            continue
+        assert len(rep.shards) == s
+        assert (rep.merge_pairwise, rep.merge_depth) == merge_plan(s)
+        assert sum(sec.ndc for sec in rep.shards) == rep.actual_ndc
+        assert (sum(sec.hops for sec in rep.shards)
+                == int(np.asarray(st.hops)[i]))
+        assert (sum(sec.n_inspected for sec in rep.shards)
+                == int(np.asarray(st.n_inspected)[i]))
+        clause = np.sum([sec.n_clause_valid for sec in rep.shards], axis=0)
+        np.testing.assert_array_equal(clause, merged_clause[i])
+        sb = int(shard_budgets(rep.predicted_budget, s)[()])
+        for j, sec in enumerate(rep.shards):
+            assert sec.shard == j and sec.budget == sb
+            assert sec.termination in ("queue-drained", "budget", "greedy",
+                                       "active")
+        assert 1.0 / s <= rep.work_balance <= 1.0
+        # serializable + rendered
+        d = json.loads(rep.to_json())
+        assert len(d["shards"]) == s
+        assert f"shards={s}" in rep.format()
+
+
+@pytest.mark.parametrize("plan", ["scan", "traverse", "widen"])
+def test_shard_sections_all_plans(world, plan):
+    """The invariant holds on every execution plan's report, and scan
+    lanes override per-shard termination too (each shard's slice of the
+    bitmap was scanned exhaustively)."""
+    ds, cfg, engines, _, planner = world
+    eng = engines[2]
+    wl = make_label_workload(ds, batch=4, kind="contain", seed=5)
+    res = planned_search(eng, planner, cfg, wl.queries, wl.spec,
+                         probe_budget=32, alpha=1.5, force_plan=plan,
+                         explain=True)
+    st = res.state
+    for i, rep in enumerate(res.reports):
+        assert rep.plan == plan and len(rep.shards) == 2
+        assert sum(sec.ndc for sec in rep.shards) == int(np.asarray(st.cnt)[i])
+        assert (sum(sec.hops for sec in rep.shards)
+                == int(np.asarray(st.hops)[i]))
+        if plan == "scan":
+            assert rep.termination == "scan-exhaustive"
+            assert all(sec.termination == "scan-exhaustive"
+                       for sec in rep.shards)
+
+
+def test_direct_sections_match_engine_search(world):
+    ds, cfg, engines, _, _ = world
+    eng = engines[4]
+    wl = make_label_workload(ds, batch=4, kind="contain", seed=7)
+    st = eng.search(cfg, wl.queries, wl.spec, 200)
+    secs = build_shard_sections(cfg, st, 200)
+    cnt = np.asarray(st.shard.cnt)
+    for i in range(4):
+        assert [sec.ndc for sec in secs[i]] == [int(v) for v in cnt[i]]
+        assert sum(sec.ndc for sec in secs[i]) == int(np.asarray(st.cnt)[i])
+
+
+# --------------------------------------------- sharded tracing contract ----
+@pytest.mark.parametrize("backend", ["dense", "pallas_persistent"])
+def test_sharded_tracing_bit_identity_zero_dispatch(world, backend):
+    """PR 7's contract, extended to sharded engines: tracing must change
+    no result bit and add no device dispatch; shard spans carry the shard
+    index and merge topology as plain ints."""
+    ds, cfg, engines, est, _ = world
+    if backend == "dense":
+        eng = engines[2]
+    else:
+        g = build_sharded_graph_index(np.asarray(ds.vectors), 2, degree=8,
+                                      seed=0)
+        eng = ShardedSearchEngine.build(ds, g, backend=backend, mesh=None)
+    wl = make_label_workload(ds, batch=6, kind="contain", seed=9)
+
+    d0 = dispatch_counters()
+    plain = e2e_search(eng, est, cfg, wl.queries, wl.spec, probe_budget=32,
+                       alpha=1.5)
+    d1 = dispatch_counters()
+    tr = Tracer()
+    traced = e2e_search(eng, est, cfg, wl.queries, wl.spec, probe_budget=32,
+                        alpha=1.5, tracer=tr, explain=True)
+    d2 = dispatch_counters()
+
+    np.testing.assert_array_equal(np.asarray(plain.state.res_idx),
+                                  np.asarray(traced.state.res_idx))
+    np.testing.assert_array_equal(np.asarray(plain.state.res_dist),
+                                  np.asarray(traced.state.res_dist))
+    np.testing.assert_array_equal(np.asarray(plain.state.cnt),
+                                  np.asarray(traced.state.cnt))
+    if backend == "pallas_persistent":
+        assert (d2["launches"] - d1["launches"]
+                == d1["launches"] - d0["launches"])
+
+    searches = tr.spans(name="shard-search")
+    assert searches and all(sp.attrs["n_shards"] == 2 for sp in searches)
+    assert {sp.attrs["shard"] for sp in searches} == {0, 1}
+    merges = tr.spans(name="shard-merge")
+    assert merges
+    for sp in merges:
+        assert (sp.attrs["pairwise"], sp.attrs["depth"]) == merge_plan(2)
+        assert sp.attrs["path"] == "loop"
+        assert all(isinstance(v, (int, float, str, bool))
+                   for v in sp.attrs.values())
+
+
+# ---------------------------------------------------------------- drift ----
+def _record_window(cal, n, loc, actual_mult, seed):
+    rng = np.random.default_rng(seed)
+    for i in range(n):
+        cal.record(rid=i, plan="traverse", predicted=300,
+                   actual=int(300 * actual_mult * np.exp(rng.normal(0, 0.1))),
+                   probe_ndc=32, n_slices=1, alpha=1.5,
+                   features=rng.normal(loc=loc, size=6).astype(np.float32))
+
+
+def test_drift_quiet_on_stationary_alarms_on_shift():
+    dcfg = DriftConfig(min_ref=64, min_cur=32)
+    cal = CalibrationMonitor()
+    mon = DriftMonitor(dcfg)
+    rep = mon.observe(cal)
+    assert not rep["ready"] and not rep["alarm"]     # below min_ref
+
+    _record_window(cal, 100, loc=0.0, actual_mult=1.0, seed=1)
+    rep = mon.observe(cal)                           # freezes the reference
+    assert rep["ready"] and rep["n_ref"] == 100 and rep["n_cur"] == 0
+    assert not rep["alarm"]
+
+    _record_window(cal, 100, loc=0.0, actual_mult=1.0, seed=2)
+    rep = mon.observe(cal)                           # stationary → quiet
+    assert rep["n_cur"] == 100 and not rep["alarm"]
+    assert rep["psi_max"] < dcfg.psi_threshold
+
+    mon.advance(cal)     # consume the quiet window so the next one is pure
+    _record_window(cal, 100, loc=3.0, actual_mult=8.0, seed=3)
+    rep = mon.observe(cal)                           # injected shift → alarm
+    assert rep["alarm"] and rep["alarms"]["psi"] and rep["alarms"]["log_rmse"]
+    # actual = 8× predicted with σ=0.1 noise ⇒ log-RMSE ≈ ln 8
+    assert rep["log_rmse_cur"] == pytest.approx(np.log(8.0), abs=0.15)
+
+    mon.advance(cal)                                 # trainer consumed it
+    rep = mon.observe(cal)
+    assert rep["n_cur"] == 0 and not rep["alarm"]
+
+    # every value round-trips through JSON and the strict exporter
+    json.dumps(rep)
+    names = validate_prometheus(
+        prometheus_text({"n_completed": 1}, None, rep))
+    assert {"repro_drift_alarm", "repro_drift_psi_max",
+            "repro_drift_alarm_detail"} <= set(names)
+
+
+def test_drift_psi_matches_hand_recomputation():
+    """report()'s per-feature PSI must equal psi() applied to the exact
+    reference / current windows the monitor claims to use."""
+    dcfg = DriftConfig(min_ref=32, min_cur=16, psi_bins=4)
+    cal = CalibrationMonitor()
+    mon = DriftMonitor(dcfg)
+    _record_window(cal, 40, loc=0.0, actual_mult=1.0, seed=4)
+    mon.observe(cal)
+    _record_window(cal, 40, loc=1.0, actual_mult=1.0, seed=5)
+    rep = mon.report(cal)
+    ref = mon._ref["features"]
+    cols = cal.arrays()
+    cur = cols["features"][-40:]
+    for j, got in enumerate(rep["psi_by_feature"]):
+        assert got == pytest.approx(psi(ref[:, j], cur[:, j], bins=4),
+                                    rel=1e-9)
+
+
+def test_drift_win_rate_shift_detector():
+    cfgd = DriftConfig(min_ref=32, min_cur=32, min_plan_n=24,
+                       win_rate_shift=0.25)
+    cal = CalibrationMonitor()
+    mon = DriftMonitor(cfgd)
+    rng = np.random.default_rng(0)
+    feats = lambda: rng.normal(size=4).astype(np.float32)   # noqa: E731
+    for i in range(50):      # reference: traverse always wins (act ≤ pred)
+        cal.record(rid=i, plan="traverse", predicted=300, actual=200,
+                   probe_ndc=8, n_slices=1, alpha=1.0, features=feats())
+    mon.set_reference(cal)
+    for i in range(50):      # shifted: traverse always loses
+        cal.record(rid=i, plan="traverse", predicted=300, actual=400,
+                   probe_ndc=8, n_slices=1, alpha=1.0, features=feats())
+    rep = mon.report(cal)
+    assert rep["alarms"]["win_rate"]
+    assert rep["plans"]["traverse"]["shift"] == pytest.approx(1.0)
+    assert rep["plans"]["traverse"]["judged"]
+    # scan never reaches min_plan_n on either side → not judged, no alarm
+    assert not rep["plans"]["scan"]["judged"]
+
+
+def test_drift_window_is_bounded():
+    dcfg = DriftConfig(min_ref=16, min_cur=8, window=32)
+    cal = CalibrationMonitor()
+    mon = DriftMonitor(dcfg)
+    _record_window(cal, 20, loc=0.0, actual_mult=1.0, seed=6)
+    mon.observe(cal)
+    _record_window(cal, 200, loc=0.0, actual_mult=1.0, seed=7)
+    rep = mon.report(cal)
+    assert rep["n_cur"] == 32                        # capped at `window`
+
+
+# ------------------------------------------------------- sink rotation ----
+def test_trace_sink_rotation_bounds_disk(tmp_path):
+    import os
+
+    path = str(tmp_path / "spans.jsonl")
+    cap = 2000
+    tr = Tracer(sink=path, sink_max_bytes=cap)
+    for i in range(300):
+        tr.emit("launch", f"q-{i}", width=8, step=i)
+    tr.flush()
+    assert tr.n_rotations > 0
+    assert os.path.getsize(path) <= cap
+    assert os.path.getsize(path + ".1") <= cap
+    for f in (path, path + ".1"):                    # kept lines stay valid
+        for line in open(f):
+            json.loads(line)
+    tr.close()
+    # re-opening an existing file resumes the byte count from its size
+    tr2 = Tracer(sink=path, sink_max_bytes=cap)
+    assert tr2._sink_bytes == os.path.getsize(path)
+    tr2.close()
+
+
+# --------------------------------------------- scheduler shard telemetry ----
+def test_scheduler_shard_ndc_sums_to_request_ndc(world):
+    ds, cfg, engines, est, _ = world
+    eng = engines[2]
+    scfg = ServeConfig(lane_width=4, buckets=(128, None), probe_budget=32,
+                       alpha=1.5, cache_capacity=0, queue_capacity=64)
+    sched = CostAwareScheduler(eng, est, cfg, scfg)
+    wl = make_label_workload(ds, batch=10, kind="contain", seed=11)
+    reqs = requests_from_workload(wl, arrivals=np.zeros(wl.batch))
+    for r in reqs:
+        sched.submit(r, 0.0)
+    sched.run_until_idle(0.0)
+    sh = sched.summary()["shards"]
+    assert sh["n_shards"] == 2 and len(sh["ndc_by_shard"]) == 2
+    assert sum(sh["ndc_by_shard"]) == sum(r.ndc for r in reqs)
+    assert sh["ndc_skew"] >= 1.0 and 0.0 < sh["work_balance"] <= 1.0
+    names = validate_prometheus(sched.prometheus())
+    assert names["repro_shard_ndc_total"] == 2
+    assert "repro_shard_work_balance" in names
+
+
+def test_scheduler_shard_bitmap_counts(world):
+    """Forced-scan serving counts each admitted filter's bitmap exactly
+    once, split at the engine's shard offsets — equal to an offline
+    popcount of the same workload's validity mask."""
+    from repro.core.planner import scan_stats
+
+    ds, cfg, engines, est, _ = world
+    eng = engines[2]
+    scfg = ServeConfig(lane_width=4, buckets=(128, None), plan="scan",
+                       cache_capacity=0, queue_capacity=64)
+    sched = CostAwareScheduler(eng, est, cfg, scfg)
+    wl = make_label_workload(ds, batch=8, kind="contain", seed=13)
+    reqs = requests_from_workload(wl, arrivals=np.zeros(wl.batch))
+    for r in reqs:
+        sched.submit(r, 0.0)
+    sched.run_until_idle(0.0)
+    valid = np.asarray(scan_stats(eng, eng.compile(wl.spec)).valid)
+    ns = eng.shard_size
+    expect = [int(valid[:, int(o):int(o) + ns].sum()) for o in eng.offsets]
+    sh = sched.summary()["shards"]
+    assert sh["bitmap_by_shard"] == expect
+    names = validate_prometheus(sched.prometheus())
+    assert names["repro_shard_bitmap_count_total"] == 2
+
+
+def test_scheduler_status_surface(world):
+    ds, cfg, engines, est, _ = world
+    sched = CostAwareScheduler(
+        engines[2], est, cfg,
+        ServeConfig(lane_width=4, probe_budget=32, cache_capacity=0,
+                    queue_capacity=64),
+        drift=DriftConfig(min_ref=4, min_cur=2))
+    wl = make_label_workload(ds, batch=6, kind="contain", seed=15)
+    for r in requests_from_workload(wl, arrivals=np.zeros(wl.batch)):
+        sched.submit(r, 0.0)
+    sched.run_until_idle(0.0)
+    st = sched.status()
+    json.dumps(st)                                   # fully serializable
+    assert st["healthy"] is True
+    assert st["queue"]["depth"] == 0 and st["queue"]["capacity"] == 64
+    assert st["summary"]["shards"]["n_shards"] == 2
+    assert st["drift"]["ready"]                      # min_ref=4 < 6 records
+    assert st["calibration"]["n_records"] == 6
+    # drift opt-out: no monitor, surface still healthy
+    s2 = CostAwareScheduler(engines[1], est, cfg,
+                            ServeConfig(lane_width=4), drift=False)
+    st2 = s2.status()
+    assert st2["drift"] is None and st2["healthy"] is True
+    assert "shards" not in st2["summary"]            # unsharded: no block
+
+
+def test_unsharded_engine_has_no_shard_metrics(world):
+    ds, cfg, engines, est, _ = world
+    sched = CostAwareScheduler(
+        engines[1], est, cfg,
+        ServeConfig(lane_width=4, probe_budget=32, cache_capacity=0,
+                    queue_capacity=64))
+    wl = make_label_workload(ds, batch=4, kind="contain", seed=17)
+    for r in requests_from_workload(wl, arrivals=np.zeros(wl.batch)):
+        sched.submit(r, 0.0)
+    sched.run_until_idle(0.0)
+    assert "shards" not in sched.summary()
+    validate_prometheus(sched.prometheus())
